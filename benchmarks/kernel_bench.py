@@ -1,0 +1,67 @@
+"""Kernel micro-benchmarks: oracle wall time on CPU + analytic TPU roofline
+estimates for the Pallas kernels (interpret mode timing is meaningless for
+perf, so TPU projections come from the tiling math)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import hw
+
+
+def _time(f, *args, n=3):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.time()
+    for _ in range(n):
+        jax.block_until_ready(f(*args))
+    return (time.time() - t0) / n
+
+
+def kernels():
+    rows = []
+    from repro.kernels.flash_attention import ops as fa
+    b, s, h, kv, hd = 2, 1024, 8, 4, 64
+    q = jax.random.normal(jax.random.key(0), (b, s, h, hd), jnp.bfloat16)
+    k = jax.random.normal(jax.random.key(1), (b, s, kv, hd), jnp.bfloat16)
+    v = jax.random.normal(jax.random.key(2), (b, s, kv, hd), jnp.bfloat16)
+    ref = jax.jit(lambda q, k, v: fa.flash_attention(q, k, v,
+                                                     impl="reference"))
+    t = _time(ref, q, k, v)
+    flops = 4 * b * h * s * s * hd
+    rows.append(("kernel/flash_attention/ref_cpu",
+                 f"{t * 1e3:.1f}ms for {flops / 1e9:.1f}GF",
+                 f"tpu_roofline={flops / hw.TPU_PEAK_FLOPS_BF16 * 1e6:.1f}us"))
+
+    from repro.kernels.ssd_scan import ops as ssd
+    b2, s2, h2, p2, n2 = 2, 512, 8, 64, 64
+    x = jax.random.normal(jax.random.key(0), (b2, s2, h2, p2)) * 0.3
+    a = -jnp.exp(jax.random.normal(jax.random.key(1), (h2,)) * 0.2)
+    bm = jax.random.normal(jax.random.key(2), (b2, s2, n2)) * 0.3
+    cm = jax.random.normal(jax.random.key(3), (b2, s2, n2)) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(jax.random.key(4), (b2, s2, h2)))
+    dsk = jnp.ones((h2,))
+    f = jax.jit(lambda *xs: ssd.ssd(*xs, 128, impl="reference"))
+    t = _time(f, x, a, bm, cm, dt, dsk)
+    chunk = 128
+    fl = b2 * h2 * (s2 // chunk) * (2 * chunk * chunk * n2
+                                    + 2 * chunk * chunk * p2)
+    rows.append(("kernel/ssd_scan/ref_cpu",
+                 f"{t * 1e3:.1f}ms for {fl / 1e9:.1f}GF intra-chunk",
+                 f"tpu_roofline={fl / hw.TPU_PEAK_FLOPS_BF16 * 1e6:.1f}us"))
+
+    from repro.kernels.voltage_inject import ops as vi
+    data = jax.random.bits(jax.random.key(0), (512, 8192), dtype=jnp.uint32)
+    prob = jnp.full((512,), 0.01, jnp.float32)
+    rw = jax.random.bits(jax.random.key(1), (512, 8192), dtype=jnp.uint32)
+    pl_ = jax.random.bits(jax.random.key(2), (2, 512, 8192), dtype=jnp.uint32)
+    g = jax.jit(lambda *xs: vi.inject(*xs, impl="reference"))
+    t = _time(g, data, prob, rw, pl_)
+    gb = data.size * 4 * 5 / 1e9
+    rows.append(("kernel/voltage_inject/ref_cpu",
+                 f"{t * 1e3:.1f}ms for {gb:.2f}GB touched",
+                 f"tpu_roofline={gb * 1e9 / hw.TPU_HBM_BW * 1e6:.0f}us"))
+    return rows

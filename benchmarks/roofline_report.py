@@ -1,0 +1,78 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads artifacts/dryrun/*.json (produced by repro.launch.dryrun) and emits
+one row per (arch x shape) cell: the three terms, the dominant bottleneck,
+MODEL/HLO flops ratio and the achievable roofline fraction.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_cells(mesh_suffix: str = "256"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ART_DIR,
+                                              f"*_{mesh_suffix}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def roofline():
+    rows = []
+    cells = load_cells()
+    if not cells:
+        return [("roofline/none", "no artifacts",
+                 "run: python -m repro.launch.dryrun --all")]
+    for d in cells:
+        if d.get("status") == "skipped":
+            rows.append((f"roofline/{d['arch']}/{d['shape']}", "SKIP",
+                         d["reason"][:60]))
+            continue
+        if d.get("status") != "ok":
+            rows.append((f"roofline/{d['arch']}/{d['shape']}", "ERROR",
+                         d.get("error", "")[:80]))
+            continue
+        rf = d["roofline"]
+        rows.append((
+            f"roofline/{rf['arch']}/{rf['shape']}",
+            f"c={rf['compute_s']:.2e}s m={rf['memory_s']:.2e}s "
+            f"coll={rf['collective_s']:.2e}s",
+            f"dominant={rf['dominant']} frac={rf['roofline_fraction']:.3f} "
+            f"useful={rf['useful_flops_ratio']:.2f}"))
+    return rows
+
+
+def markdown_table(mesh_suffix: str = "256") -> str:
+    """Full table for EXPERIMENTS.md."""
+    cells = load_cells(mesh_suffix)
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | "
+        "dominant | MODEL/HLO | roofline frac | mem/dev (GiB) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for d in cells:
+        if d.get("status") == "skipped":
+            arch = d['arch'].replace('_', '-')
+            lines.append(f"| {arch} | {d['shape']} | — | — | — | "
+                         f"skipped (full attention) | — | — | — |")
+            continue
+        if d.get("status") != "ok":
+            lines.append(f"| {d['arch']} | {d['shape']} | ERROR | | | | | | |")
+            continue
+        rf = d["roofline"]
+        mem = d["memory"]["analytic_per_device"]["total"] / 2 ** 30
+        lines.append(
+            f"| {rf['arch']} | {rf['shape']} | {rf['compute_s']:.2e} | "
+            f"{rf['memory_s']:.2e} | {rf['collective_s']:.2e} | "
+            f"{rf['dominant']} | {rf['useful_flops_ratio']:.2f} | "
+            f"{rf['roofline_fraction']:.3f} | {mem:.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

@@ -1,0 +1,41 @@
+"""Benchmark harness: one entry per paper table/figure + kernel micro-
+benchmarks + the roofline report from dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run fig14      # name filter
+
+Output: ``name,us_per_call,derived`` CSV rows per the harness contract
+(us_per_call = wall time of the benchmark function / rows emitted).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import kernel_bench, paper_figures, roofline_report
+    pattern = sys.argv[1] if len(sys.argv) > 1 else ""
+    fns = list(paper_figures.ALL) + [kernel_bench.kernels,
+                                     roofline_report.roofline]
+    print("name,us_per_call,derived")
+    failures = 0
+    for fn in fns:
+        if pattern and pattern not in fn.__name__:
+            continue
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001 — report and continue
+            failures += 1
+            print(f"{fn.__name__},ERROR,{type(e).__name__}: {e}")
+            continue
+        us = (time.time() - t0) * 1e6
+        for name, value, derived in rows:
+            print(f'{name},{us / max(len(rows), 1):.0f},"{value} | {derived}"')
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Quickstart: the paper's whole story in one script.
+
+1. Characterize a simulated DIMM population (V_min, error onset, latency
+   recovery) — the Section 4 experiments.
+2. Fit the Eq. 1 performance-loss predictor and run Voltron (Algorithm 1)
+   against MemDVFS — the Section 6 evaluation.
+3. Apply the same control law to a TPU training step's roofline terms —
+   the framework integration (core/hbm_adapter.py).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import hbm_adapter, memdvfs, perf_model, voltron
+from repro.dram import chips, circuit, test1
+from repro.memsim import workloads
+
+
+def main():
+    print("== 1. Characterization (Section 4) ==")
+    d = [x for x in chips.population() if x.module == "C2"][0]
+    print(f"DIMM {d.module} (vendor {d.vendor}): V_min = "
+          f"{chips.measured_vmin(d)} V (Table 7: {d.vmin} V)")
+    for v in [d.vmin, d.vmin - 0.05]:
+        r = test1.run(d, v, rows=32)
+        print(f"  Test 1 @ {v:.3f} V, 10ns latencies: "
+              f"{r.erroneous_lines}/{r.total_lines} erroneous lines")
+    fix = test1.find_min_latency(d, d.vmin - 0.025)
+    print(f"  errors at {d.vmin - 0.025:.3f} V eliminated by tRCD/tRP = {fix}")
+    t3 = circuit.table3(1.0)
+    print(f"  circuit model @1.0 V: tRCD={t3['rcd'][0]} tRP={t3['rp'][0]} "
+          f"tRAS={t3['ras'][0]} (paper Table 3: 17.5/18.75/45.0)")
+
+    print("\n== 2. Voltron vs MemDVFS (Section 6) ==")
+    m = perf_model.fit()
+    print(f"Eq.1 fit: R2 = {m.r2_low:.2f}/{m.r2_high:.2f} "
+          "(paper: 0.75/0.90)")
+    homog = workloads.homogeneous_workloads()
+    mem = [(n, c) for n, c in homog if c[0].memory_intensive]
+    vr = [voltron.run_controller(n, c, 5.0, n_intervals=5) for n, c in mem]
+    dr = [memdvfs.run(n, c, n_intervals=5) for n, c in mem]
+    print(f"memory-intensive suite ({len(mem)} workloads), 5% loss target:")
+    print(f"  Voltron : loss {np.mean([r.perf_loss_pct for r in vr]):.1f}%  "
+          f"system energy -{np.mean([r.system_energy_savings_pct for r in vr]):.1f}%"
+          "   (paper: 2.9% / -7.0%)")
+    print(f"  MemDVFS : loss {np.mean([r.perf_loss_pct for r in dr]):.1f}%  "
+          f"system energy -{np.mean([r.system_energy_savings_pct for r in dr]):.1f}%"
+          "   (paper: ~0 effect)")
+
+    print("\n== 3. TPU adaptation (core/hbm_adapter.py) ==")
+    for label, terms in [
+            ("compute-bound train step", {"compute_s": 1.0, "memory_s": 0.3,
+                                          "collective_s": 0.4}),
+            ("memory-bound decode step", {"compute_s": 0.1, "memory_s": 1.0,
+                                          "collective_s": 0.05})]:
+        pred = hbm_adapter.select_state(terms, target_loss_pct=5.0)
+        print(f"  {label}: HBM state {pred.state.name} "
+              f"(slowdown {pred.slowdown_pct:.1f}%, "
+              f"chip energy {pred.chip_energy_savings_pct:+.1f}%)")
+
+
+if __name__ == "__main__":
+    main()

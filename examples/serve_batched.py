@@ -1,0 +1,13 @@
+"""Batched serving example: prefill + greedy decode over a request batch,
+with the Voltron controller on the (memory-bound) decode path.
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    raise SystemExit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "smollm-135m",
+         "--variant", "smoke", "--batch", "8", "--prompt-len", "64",
+         "--gen", "32"]))

@@ -1,0 +1,38 @@
+"""Check memsim outputs against the paper's headline numbers (pre-calibration)."""
+import numpy as np
+from repro.memsim import system, workloads
+from repro.memsim.system import voltron_point
+
+bms = workloads.benchmarks()
+homog = workloads.homogeneous_workloads()
+mem = [(n, c) for n, c in homog if c[0].memory_intensive]
+non = [(n, c) for n, c in homog if not c[0].memory_intensive]
+print(f"{len(mem)} mem-intensive, {len(non)} non-mem-intensive")
+
+# Fig 15 baseline breakdown
+for label, group in [("non-mem", non), ("mem", mem)]:
+    shares = []
+    for n, c in group:
+        r = system.simulate(c)
+        shares.append(r.energy_j["dram"] / r.energy_j["system"])
+    print(f"{label}: DRAM share of system energy = {np.mean(shares)*100:.1f}%  (target: non-mem 20%, mem 53%)")
+
+# Table 5 (non-mem) and Fig 13 (mem): array voltage scaling sweep
+print("\nV      non-mem: loss / dramP / sysE     mem: loss / dramP / sysE")
+print("targets(non-mem): 1.3:0.5/3.4/0.8  1.2:1.4/10.4/2.5  1.1:3.5/16.5/3.5  1.0:7.1/22.7/4.0  0.9:14.2/29.0/2.9")
+for v in [1.3, 1.2, 1.1, 1.0, 0.9]:
+    op = voltron_point(v)
+    res_n = [system.evaluate(c, op) for _, c in non]
+    res_m = [system.evaluate(c, op) for _, c in mem]
+    def agg(rs): return (np.mean([r.perf_loss_pct for r in rs]),
+                         np.mean([r.dram_power_savings_pct for r in rs]),
+                         np.mean([r.system_energy_savings_pct for r in rs]))
+    ln, lm = agg(res_n), agg(res_m)
+    print(f"{v:.1f}   {ln[0]:5.1f} {ln[1]:5.1f} {ln[2]:5.1f}          {lm[0]:5.1f} {lm[1]:5.1f} {lm[2]:5.1f}")
+
+# per-benchmark loss at 1.1V vs MPKI (Fig 12/13 shape; mcf should be lowest of mem)
+op = voltron_point(1.1)
+print("\nmem-intensive loss at 1.1V:")
+for n, c in mem:
+    r = system.evaluate(c, op)
+    print(f"  {n:12s} mpki={c[0].mpki:7.2f} loss={r.perf_loss_pct:5.2f}%")

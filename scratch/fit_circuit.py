@@ -1,0 +1,49 @@
+"""Fit alpha-power-law circuit constants to the paper's Table 3.
+
+Model per operation op in {rcd, rp, ras}:
+    t_op(V) = a_op * V / (V - vth_op)**alpha_op   [ns]
+Paper: guardbanded = ceil(raw * 1.38 / 1.25) * 1.25 must equal Table 3.
+Raw targets = table/1.38.
+"""
+import numpy as np
+from scipy.optimize import least_squares
+
+V = np.array([1.35, 1.30, 1.25, 1.20, 1.15, 1.10, 1.05, 1.00, 0.95, 0.90])
+TABLE3 = {
+    "rcd": np.array([13.75,13.75,13.75,13.75,15.00,15.00,16.25,17.50,18.75,21.25]),
+    "rp":  np.array([13.75,13.75,15.00,15.00,15.00,16.25,17.50,18.75,21.25,26.25]),
+    "ras": np.array([36.25,36.25,36.25,37.50,37.50,40.00,41.25,45.00,48.75,52.50]),
+}
+GUARD = 1.38
+CLK = 1.25
+
+def model(p, v):
+    a, vth, alpha = p
+    return a * v / np.maximum(v - vth, 1e-3) ** alpha
+
+def quantize(raw):
+    return np.ceil(raw * GUARD / CLK - 1e-9) * CLK
+
+results = {}
+for op, tbl in TABLE3.items():
+    raw_target = tbl / GUARD
+    def resid(p):
+        r = model(p, V) - raw_target
+        # soft penalty if quantized value mismatches table
+        q = quantize(model(p, V))
+        return np.concatenate([r, 5.0 * (q - tbl) / CLK])
+    best = None
+    for vth0 in [0.3, 0.45, 0.6, 0.7]:
+        for alpha0 in [0.8, 1.1, 1.4]:
+            sol = least_squares(resid, x0=[raw_target[0]*0.5, vth0, alpha0],
+                                bounds=([0.1, 0.05, 0.3], [100., 0.85, 3.0]))
+            if best is None or sol.cost < best.cost:
+                best = sol
+    p = best.x
+    q = quantize(model(p, V))
+    ok = np.array_equal(q, tbl)
+    results[op] = (p, ok, q)
+    print(f"{op}: a={p[0]:.6f} vth={p[1]:.6f} alpha={p[2]:.6f} exact_table_match={ok}")
+    if not ok:
+        print("   got:", q, "\n   want:", tbl)
+    print("   raw:", np.round(model(p, V), 3))

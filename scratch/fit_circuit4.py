@@ -1,0 +1,44 @@
+"""tRAS as two-phase: sensing + restoration tail, each alpha-power-law.
+t(V) = c + a1*V/(V-vth1)**al1 + a2*V/(V-vth2)**al2"""
+import numpy as np, itertools
+from scipy.optimize import least_squares
+
+V = np.array([1.35, 1.30, 1.25, 1.20, 1.15, 1.10, 1.05, 1.00, 0.95, 0.90])
+tbl = np.array([36.25, 36.25, 36.25, 37.50, 37.50, 40.00, 41.25, 45.00, 48.75, 52.50])
+GUARD, CLK = 1.38, 1.25
+lo, hi = (tbl - CLK) / GUARD, tbl / GUARD
+mid = (lo + hi) / 2
+
+def model(p, v):
+    c, a1, vth1, al1, a2, vth2, al2 = p
+    return (c + a1 * v / np.maximum(v - vth1, 1e-4) ** al1
+              + a2 * v / np.maximum(v - vth2, 1e-4) ** al2)
+
+def quantize(raw):
+    return np.ceil(raw * GUARD / CLK - 1e-9) * CLK
+
+def resid(p):
+    r = model(p, V)
+    return np.concatenate([
+        20.0 * np.maximum(lo - r, 0),
+        20.0 * np.maximum(r - hi, 0),
+        0.02 * (r - mid),
+    ])
+
+best = None
+for a10, vth10, al10, vth20, al20 in itertools.product(
+        [0.5, 2., 8.], [0.3, 0.6, 0.8], [0.7, 1.5, 3.0], [0.5, 0.7, 0.85], [2.0, 4.0, 6.0]):
+    sol = least_squares(resid, x0=[10., a10, vth10, al10, 1.0, vth20, al20],
+                        bounds=([0., 0.01, 0.01, 0.2, 0.001, 0.01, 0.2],
+                                [30., 200., 0.88, 8.0, 200., 0.88, 8.0]))
+    if best is None or sol.cost < best.cost:
+        best = sol
+p = best.x
+r = model(p, V)
+q = quantize(r)
+names = "c a1 vth1 al1 a2 vth2 al2".split()
+print(", ".join(f"{n}={v:.6f}" for n, v in zip(names, p)))
+print("match:", np.array_equal(q, tbl))
+print("got :", q)
+print("want:", tbl)
+print("raw :", np.round(r, 3))

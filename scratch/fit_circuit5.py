@@ -1,0 +1,28 @@
+import numpy as np
+from scipy.optimize import differential_evolution
+
+V = np.array([1.35,1.30,1.25,1.20,1.15,1.10,1.05,1.00,0.95,0.90])
+GUARD, CLK = 1.38, 1.25
+TABLES = {
+ "ras": np.array([36.25,36.25,36.25,37.50,37.50,40.00,41.25,45.00,48.75,52.50]),
+ "rcd": np.array([13.75,13.75,13.75,13.75,15.00,15.00,16.25,17.50,18.75,21.25]),
+ "rp":  np.array([13.75,13.75,15.00,15.00,15.00,16.25,17.50,18.75,21.25,26.25]),
+}
+def model(p, v):
+    c, a1, vth1, al1, a2, vth2, al2 = p
+    return (c + a1*v/np.maximum(v-vth1,1e-4)**al1 + a2*v/np.maximum(v-vth2,1e-4)**al2)
+def quantize(raw):
+    return np.ceil(raw*GUARD/CLK - 1e-9)*CLK
+for name, tbl in TABLES.items():
+    lo, hi = (tbl-CLK)/GUARD + 1e-3, tbl/GUARD - 1e-3
+    def loss(p):
+        r = model(p, V)
+        return np.sum(np.maximum(lo-r,0)**2) + np.sum(np.maximum(r-hi,0)**2)
+    bounds=[(0,30),(0.01,100),(0.01,0.88),(0.2,8),(0.001,100),(0.01,0.88),(0.2,8)]
+    res = differential_evolution(loss, bounds, seed=3, maxiter=3000, tol=1e-14,
+                                 popsize=40, mutation=(0.3,1.2), recombination=0.8, polish=True)
+    p = res.x; r = model(p,V); q = quantize(r)
+    ok = np.array_equal(q, tbl)
+    print(f'"{name}": ({", ".join(f"{x:.6f}" for x in p)}),  # match={ok} loss={res.fun:.3e}')
+    if not ok:
+        print("   got :", q); print("   want:", tbl); print("   raw :", np.round(r,3))

@@ -1,0 +1,25 @@
+import itertools, numpy as np
+import repro.memsim.core as cm
+from repro.memsim import workloads
+TGT_NON = {1.3:0.5, 1.2:1.4, 1.1:3.5, 1.0:7.1, 0.9:14.2}
+TGT_MEM11 = 2.9
+best=None
+homog = workloads.homogeneous_workloads()
+mem = [c for n,c in homog if c[0].memory_intensive]
+non = [c for n,c in homog if not c[0].memory_intensive]
+for amp, cf, mlps, rob in itertools.product([3.0,3.6,4.2,5.0],[0.6,0.75,0.9],[0.45,0.62,0.8],[0.0]):
+    cm.STALL_AMPLIFY, cm.CONFLICT_FRAC, cm.MLP_SCALE, cm.ROB_HIDE_CYCLES = amp, cf, mlps, rob
+    import repro.memsim.system as system
+    system._simulate_cached.cache_clear(); system._alone_ipc_nominal.cache_clear()
+    err=0; res={}
+    for v,t in TGT_NON.items():
+        op = system.voltron_point(v)
+        l = np.mean([system.evaluate(c,op).perf_loss_pct for c in non])
+        res[v]=l; err += ((l-t)/max(t,1))**2
+    lm = np.mean([system.evaluate(c,system.voltron_point(1.1)).perf_loss_pct for c in mem])
+    lm9 = np.mean([system.evaluate(c,system.voltron_point(0.9)).perf_loss_pct for c in mem])
+    err += ((lm-TGT_MEM11)/TGT_MEM11)**2 + ((lm9-12.0)/12.0)**2
+    if best is None or err<best[0]:
+        best=(err,(amp,cf,mlps,rob),dict(res),lm,lm9)
+        print(f"err={err:.3f} amp={amp} cf={cf} mlp={mlps} non={ {k:round(v,1) for k,v in res.items()} } mem1.1={lm:.1f} mem0.9={lm9:.1f}")
+print("BEST", best[1])

@@ -1,0 +1,44 @@
+"""Extended beyond-paper sweep: apply the winning decode recipe (hd-TP +
+W8/KV8) to the remaining long-context + decode cells."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS","")
+import json, sys
+sys.path.insert(0, "src")
+from repro.launch.dryrun import run_cell
+from repro.launch.mesh import make_production_mesh
+from repro.parallel.sharding import ShardingPolicy
+
+CELLS = [
+    ("gemma3-1b", "long_500k", "hd_w8kv8",
+     ShardingPolicy(attn_mode="hd", kv_cache_dtype="int8", weight_dtype="int8")),
+    ("mamba2-2.7b", "long_500k", "w8",
+     ShardingPolicy(weight_dtype="int8")),
+    ("zamba2-1.2b", "long_500k", "w8kv8",
+     ShardingPolicy(attn_mode="heads", kv_cache_dtype="int8", weight_dtype="int8")),
+    ("gemma2-2b", "decode_32k", "hd_w8kv8",
+     ShardingPolicy(attn_mode="hd", kv_cache_dtype="int8", weight_dtype="int8")),
+    ("olmoe-1b-7b", "decode_32k", "w8kv8",
+     ShardingPolicy(attn_mode="heads", kv_cache_dtype="int8", weight_dtype="int8")),
+    ("pixtral-12b", "decode_32k", "w8kv8",
+     ShardingPolicy(attn_mode="seq", kv_cache_dtype="int8", weight_dtype="int8")),
+    ("dbrx-132b", "decode_32k", "w8kv8",
+     ShardingPolicy(attn_mode="seq", fsdp=False, kv_cache_dtype="int8", weight_dtype="int8")),
+    ("seamless-m4t-large-v2", "decode_32k", "w8kv8",
+     ShardingPolicy(attn_mode="heads", kv_cache_dtype="int8", weight_dtype="int8")),
+    ("qwen3-4b", "prefill_32k", "heads_q",   # q-head TP for prefill (kv repl)
+     ShardingPolicy(attn_mode="q_heads")),
+]
+os.makedirs("artifacts/hillclimb", exist_ok=True)
+mesh = make_production_mesh(multi_pod=False)
+for arch, shape, tag, pol in CELLS:
+    path = f"artifacts/hillclimb/{arch}_{shape}_{tag}.json"
+    if os.path.exists(path):
+        print(tag, "cached"); continue
+    try:
+        res = run_cell(arch, shape, policy=pol, mesh=mesh)
+        res["variant"] = tag
+    except Exception as e:
+        res = {"arch": arch, "shape": shape, "variant": tag,
+               "status": "error", "error": f"{type(e).__name__}: {e}"}
+        print(tag, "FAILED", str(e)[:150])
+    json.dump(res, open(path, "w"), indent=1)

@@ -1,0 +1,97 @@
+"""Spike: does compiled.cost_analysis() scale while-loop (scan) body costs by
+trip count on the CPU backend?  And how long does a 512-device SPMD compile of
+a representative sharded transformer step take?"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import time
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+import numpy as np
+
+print("devices:", len(jax.devices()))
+
+D, F, L = 512, 2048, 8
+
+
+def layer(x, w1, w2):
+    return x + jnp.tanh(x @ w1) @ w2
+
+
+def fwd_scan(x, w1s, w2s):
+    def body(h, ws):
+        return layer(h, ws[0], ws[1]), None
+    h, _ = jax.lax.scan(body, x, (w1s, w2s))
+    return h.sum()
+
+
+def fwd_unroll(x, w1s, w2s):
+    h = x
+    for i in range(L):
+        h = layer(h, w1s[i], w2s[i])
+    return h.sum()
+
+
+x = jax.ShapeDtypeStruct((64, D), jnp.float32)
+w1 = jax.ShapeDtypeStruct((L, D, F), jnp.float32)
+w2 = jax.ShapeDtypeStruct((L, F, D), jnp.float32)
+
+for name, fn in [("scan", fwd_scan), ("unroll", fwd_unroll)]:
+    c = jax.jit(fn).lower(x, w1, w2).compile()
+    ca = c.cost_analysis()
+    print(name, "flops:", ca.get("flops"), "bytes accessed:", ca.get("bytes accessed"))
+
+# expected true flops: L * (2*64*D*F * 2) = 8 * 2 * 64*512*2048*2
+print("analytic flops:", L * 2 * 2 * 64 * D * F)
+
+# --- 512-device sharded compile timing -------------------------------------
+mesh = jax.make_mesh((2, 16, 16), ("pod", "data", "model"))
+DM, FF, LL, VV = 2048, 8192, 24, 32000
+
+
+def block(h, ws):
+    w1, w2 = ws
+    return h + jnp.einsum("bsd,df->bsf", jnp.tanh(jnp.einsum("bsd,df->bsf", h, w1)), w2[:FF].T * 0 + w2.T).astype(h.dtype), None
+
+
+def step(tokens, emb, w1s, w2s):
+    h = emb[tokens]
+    def body(h, ws):
+        w1, w2 = ws
+        return h + (jnp.tanh(h @ w1) @ w2).astype(h.dtype), None
+    h, _ = jax.lax.scan(body, h, (w1s, w2s))
+    logits = h @ emb.T
+    return logits.sum()
+
+
+tok = jax.ShapeDtypeStruct((256, 4096), jnp.int32)
+emb = jax.ShapeDtypeStruct((VV, DM), jnp.bfloat16)
+w1s = jax.ShapeDtypeStruct((LL, DM, FF), jnp.bfloat16)
+w2s = jax.ShapeDtypeStruct((LL, FF, DM), jnp.bfloat16)
+
+shard = {
+    "tok": NamedSharding(mesh, P(("pod", "data"), None)),
+    "emb": NamedSharding(mesh, P("model", None)),
+    "w": NamedSharding(mesh, P(None, None, "model")),
+    "w2": NamedSharding(mesh, P(None, "model", None)),
+}
+t0 = time.time()
+f = jax.jit(
+    jax.grad(step, argnums=(1, 2, 3)),
+    in_shardings=(shard["tok"], shard["emb"], shard["w"], shard["w2"]),
+)
+lowered = f.lower(tok, emb, w1s, w2s)
+t1 = time.time()
+compiled = lowered.compile()
+t2 = time.time()
+print(f"lower: {t1-t0:.1f}s  compile: {t2-t1:.1f}s")
+ca = compiled.cost_analysis()
+print("sharded flops:", ca.get("flops"))
+ma = compiled.memory_analysis()
+print("mem:", ma)
+txt = compiled.as_text()
+import re
+colls = re.findall(r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)", txt)
+from collections import Counter
+print("collectives:", Counter(colls))
+print("hlo len:", len(txt))

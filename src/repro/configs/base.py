@@ -1,0 +1,153 @@
+"""Config dataclasses + the architecture registry.
+
+Every assigned architecture provides a FULL config (the published one) and a
+SMOKE config (same family, reduced dimensions) via ``full()`` / ``smoke()``
+in its ``repro/configs/<id>.py`` module.  Input shapes are the four assigned
+LM shape cells; ``input_specs`` builds ShapeDtypeStruct stand-ins for the
+dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+ARCH_IDS = [
+    "gemma2_2b", "qwen3_4b", "smollm_135m", "gemma3_1b", "olmoe_1b_7b",
+    "dbrx_132b", "mamba2_2p7b", "zamba2_1p2b", "seamless_m4t_v2",
+    "pixtral_12b",
+]
+# canonical external ids (with dashes) -> module names
+ALIASES = {
+    "gemma2-2b": "gemma2_2b", "qwen3-4b": "qwen3_4b",
+    "smollm-135m": "smollm_135m", "gemma3-1b": "gemma3_1b",
+    "olmoe-1b-7b": "olmoe_1b_7b", "dbrx-132b": "dbrx_132b",
+    "mamba2-2.7b": "mamba2_2p7b", "zamba2-1.2b": "zamba2_1p2b",
+    "seamless-m4t-large-v2": "seamless_m4t_v2", "pixtral-12b": "pixtral_12b",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    # --- attention variants -------------------------------------------------
+    rope_theta: float = 10_000.0
+    qk_norm: bool = False
+    attn_softcap: Optional[float] = None     # gemma2 logit softcapping
+    final_softcap: Optional[float] = None
+    window: Optional[int] = None             # sliding-window size (local)
+    layer_pattern: str = "G"                 # repeating; L=local, G=global,
+    #                                          M=mamba2, S=shared-attn(hybrid)
+    post_norms: bool = False                 # gemma2 post-block RMSNorm
+    act: str = "silu"                        # silu | gelu
+    tie_embeddings: bool = True
+    norm_plus_one: bool = False              # gemma RMSNorm (1 + w) style
+    embed_scale: bool = False                # gemma sqrt(d_model) embed scale
+    # --- MoE ----------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_group: int = 1024                    # dispatch group size (tokens)
+    # --- SSM (Mamba2 / SSD) -------------------------------------------------
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    conv_width: int = 4
+    ssd_chunk: int = 256
+    # --- hybrid (zamba2) ----------------------------------------------------
+    shared_attn_period: int = 0              # shared block every N layers
+    shared_d_ff: int = 0
+    # --- encoder-decoder (seamless) ------------------------------------------
+    n_enc_layers: int = 0
+    # --- modality frontend stub (vlm / audio) --------------------------------
+    frontend_tokens: int = 0                 # prefix positions fed as embeds
+    # --- numerics / compilation ----------------------------------------------
+    dtype: str = "bfloat16"
+    remat: bool = True
+    # compile the layer stack as lax.scan over pattern-period blocks (keeps
+    # full-depth HLO small).  Per-layer costs for the roofline are measured
+    # separately on shallow *unrolled* variants (see launch/dryrun.py).
+    scan_blocks: bool = True
+
+    @property
+    def pattern_period(self) -> int:
+        return len(self.layer_pattern)
+
+    @property
+    def full_blocks(self) -> int:
+        return self.n_layers // self.pattern_period
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim if self.ssm_headdim else 0
+
+    def layer_kind(self, i: int) -> str:
+        """Expand layer_pattern cyclically: kind of layer i."""
+        pat = self.layer_pattern
+        return pat[i % len(pat)]
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic (or sub-linear-cache) architectures run long_500k:
+        SSM/hybrid families and sliding-window locals with O(L) global decode.
+        Pure full-attention archs skip it (see DESIGN.md)."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        return self.window is not None       # local:global alternation
+
+    @property
+    def has_decoder(self) -> bool:
+        return True                           # all assigned archs decode
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                                # train | prefill | decode
+
+
+LM_SHAPES = [
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "decode"),
+]
+SHAPES_BY_NAME = {s.name: s for s in LM_SHAPES}
+
+
+def get_config(arch: str, variant: str = "full") -> ModelConfig:
+    mod_name = ALIASES.get(arch, arch)
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return getattr(mod, variant)()
+
+
+def cell_is_runnable(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """Whether the (arch x shape) cell runs (long_500k skip rule)."""
+    if shape.name == "long_500k":
+        return cfg.supports_long_context
+    return True
+
+
+def all_cells():
+    """All runnable (arch, shape) cells + the skip list."""
+    run, skip = [], []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in LM_SHAPES:
+            (run if cell_is_runnable(cfg, shape) else skip).append(
+                (arch, shape.name))
+    return run, skip

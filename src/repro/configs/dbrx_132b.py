@@ -1,0 +1,19 @@
+"""dbrx-132b [moe]: 40L d=6144 48H (GQA kv=8, head_dim 128) vocab=100352,
+MoE: 16 experts, top-4, expert d_ff=10752 (fine-grained).
+[hf:databricks/dbrx-base; unverified]"""
+from repro.configs.base import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="dbrx-132b", family="moe", n_layers=40, d_model=6144,
+        n_heads=48, n_kv_heads=8, head_dim=128, d_ff=10_752, vocab=100_352,
+        n_experts=16, top_k=4, rope_theta=500_000.0, tie_embeddings=False)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="dbrx-132b-smoke", family="moe", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=96, vocab=256,
+        n_experts=4, top_k=2, moe_group=64, capacity_factor=4.0,
+        tie_embeddings=False)

@@ -1,0 +1,22 @@
+"""gemma2-2b [dense]: 26L d=2304 8H (GQA kv=4, head_dim 256) d_ff=9216
+vocab=256000 — local:global alternating attention (4096-token window),
+attention + final logit softcapping, pre+post RMSNorm, GeGLU.
+[arXiv:2408.00118; hf]"""
+from repro.configs.base import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="gemma2-2b", family="dense", n_layers=26, d_model=2304,
+        n_heads=8, n_kv_heads=4, head_dim=256, d_ff=9216, vocab=256_000,
+        window=4096, layer_pattern="LG", attn_softcap=50.0,
+        final_softcap=30.0, post_norms=True, act="gelu",
+        norm_plus_one=True, embed_scale=True, tie_embeddings=True)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="gemma2-2b-smoke", family="dense", n_layers=4, d_model=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab=256,
+        window=32, layer_pattern="LG", attn_softcap=50.0, final_softcap=30.0,
+        post_norms=True, act="gelu", norm_plus_one=True, embed_scale=True)

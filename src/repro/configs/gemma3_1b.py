@@ -1,0 +1,21 @@
+"""gemma3-1b [dense]: 26L d=1152 4H (GQA kv=1, head_dim 256) d_ff=6912
+vocab=262144 — 5:1 local:global attention (512-token window), qk-norm,
+128k context target. [hf:google/gemma-3-1b-pt; unverified]"""
+from repro.configs.base import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-1b", family="dense", n_layers=26, d_model=1152,
+        n_heads=4, n_kv_heads=1, head_dim=256, d_ff=6912, vocab=262_144,
+        window=512, layer_pattern="LLLLLG", qk_norm=True,
+        rope_theta=1_000_000.0, post_norms=True, act="gelu",
+        norm_plus_one=True, embed_scale=True, tie_embeddings=True)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-1b-smoke", family="dense", n_layers=6, d_model=64,
+        n_heads=2, n_kv_heads=1, head_dim=32, d_ff=128, vocab=256,
+        window=16, layer_pattern="LLLLLG", qk_norm=True, post_norms=True,
+        act="gelu", norm_plus_one=True, embed_scale=True)

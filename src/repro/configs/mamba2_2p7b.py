@@ -1,0 +1,20 @@
+"""mamba2-2.7b [ssm]: 64L d=2560 (attention-free), ssm_state=128,
+d_inner=5120 (expand 2), headdim 64 -> 80 SSD heads, vocab=50280 —
+state-space duality (SSD) blocks. [arXiv:2405.21060; unverified]"""
+from repro.configs.base import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-2.7b", family="ssm", n_layers=64, d_model=2560,
+        n_heads=0, n_kv_heads=0, head_dim=0, d_ff=0, vocab=50_280,
+        layer_pattern="M", ssm_state=128, ssm_expand=2, ssm_headdim=64,
+        tie_embeddings=True)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-2.7b-smoke", family="ssm", n_layers=3, d_model=64,
+        n_heads=0, n_kv_heads=0, head_dim=0, d_ff=0, vocab=256,
+        layer_pattern="M", ssm_state=16, ssm_expand=2, ssm_headdim=32,
+        ssd_chunk=16, tie_embeddings=True)

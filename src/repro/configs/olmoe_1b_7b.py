@@ -1,0 +1,19 @@
+"""olmoe-1b-7b [moe]: 16L d=2048 16H (MHA kv=16, head_dim 128) vocab=50304,
+MoE: 64 experts, top-8, expert d_ff=1024, qk-norm.
+[arXiv:2409.02060; hf]"""
+from repro.configs.base import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="olmoe-1b-7b", family="moe", n_layers=16, d_model=2048,
+        n_heads=16, n_kv_heads=16, head_dim=128, d_ff=1024, vocab=50_304,
+        qk_norm=True, n_experts=64, top_k=8, tie_embeddings=False)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="olmoe-1b-7b-smoke", family="moe", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=4, head_dim=16, d_ff=64, vocab=256,
+        qk_norm=True, n_experts=8, top_k=2, moe_group=64, capacity_factor=4.0,
+        tie_embeddings=False)

@@ -1,0 +1,22 @@
+"""pixtral-12b [vlm]: 40L decoder d=5120 32H (GQA kv=8, head_dim 128)
+d_ff=14336 vocab=131072.  The pixtral-ViT frontend is a STUB per the brief:
+``input_specs()`` provides precomputed patch embeddings [B, P, d_model]
+prepended to the text tokens. [hf:mistralai/Pixtral-12B-2409; unverified]"""
+from repro.configs.base import ModelConfig
+
+PATCH_TOKENS = 1024        # image-patch positions per train/prefill sample
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="pixtral-12b", family="vlm", n_layers=40, d_model=5120,
+        n_heads=32, n_kv_heads=8, head_dim=128, d_ff=14_336, vocab=131_072,
+        rope_theta=1_000_000.0, frontend_tokens=PATCH_TOKENS,
+        tie_embeddings=False)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="pixtral-12b-smoke", family="vlm", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab=256,
+        frontend_tokens=16, tie_embeddings=False)

@@ -1,0 +1,18 @@
+"""qwen3-4b [dense]: 36L d=2560 32H (GQA kv=8, head_dim 128) d_ff=9728
+vocab=151936 — per-head qk RMSNorm, SwiGLU, RoPE (1M theta).
+[hf:Qwen/Qwen3-8B family; hf]"""
+from repro.configs.base import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-4b", family="dense", n_layers=36, d_model=2560,
+        n_heads=32, n_kv_heads=8, head_dim=128, d_ff=9728, vocab=151_936,
+        qk_norm=True, rope_theta=1_000_000.0, tie_embeddings=True)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-4b-smoke", family="dense", n_layers=3, d_model=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=160, vocab=256,
+        qk_norm=True, rope_theta=1_000_000.0)

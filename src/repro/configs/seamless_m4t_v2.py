@@ -1,0 +1,20 @@
+"""seamless-m4t-large-v2 [audio]: encoder-decoder, 24L each, d=1024 16H
+(MHA), d_ff=8192, vocab=256206.  The speech frontend is a STUB per the
+brief: ``input_specs()`` provides precomputed frame embeddings
+[B, S, d_model] for the encoder. [arXiv:2308.11596; hf]"""
+from repro.configs.base import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-large-v2", family="encdec", n_layers=24,
+        d_model=1024, n_heads=16, n_kv_heads=16, head_dim=64, d_ff=8192,
+        vocab=256_206, n_enc_layers=24, frontend_tokens=-1,  # enc is stub-fed
+        tie_embeddings=False)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-large-v2-smoke", family="encdec", n_layers=2,
+        d_model=64, n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128,
+        vocab=256, n_enc_layers=2, frontend_tokens=-1, tie_embeddings=False)

@@ -1,0 +1,18 @@
+"""smollm-135m [dense]: 30L d=576 9H (GQA kv=3, head_dim 64) d_ff=1536
+vocab=49152 — llama-architecture small model.  Also the end-to-end training
+example target (~135M params trains on CPU).
+[hf:HuggingFaceTB/SmolLM-135M; hf]"""
+from repro.configs.base import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="smollm-135m", family="dense", n_layers=30, d_model=576,
+        n_heads=9, n_kv_heads=3, head_dim=64, d_ff=1536, vocab=49_152,
+        tie_embeddings=True)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="smollm-135m-smoke", family="dense", n_layers=3, d_model=48,
+        n_heads=3, n_kv_heads=1, head_dim=16, d_ff=128, vocab=256)

@@ -1,0 +1,21 @@
+"""zamba2-1.2b [hybrid]: 38 Mamba2 layers d=2048 (ssm_state=64) + one
+*shared* attention+MLP block (32H, d_ff=8192) applied every 6th layer with
+tied weights. [arXiv:2411.15242; hf]"""
+from repro.configs.base import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-1.2b", family="hybrid", n_layers=38, d_model=2048,
+        n_heads=32, n_kv_heads=32, head_dim=64, d_ff=0, vocab=32_000,
+        layer_pattern="MMMMMS", ssm_state=64, ssm_expand=2, ssm_headdim=64,
+        shared_attn_period=6, shared_d_ff=8192, tie_embeddings=True)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-1.2b-smoke", family="hybrid", n_layers=6, d_model=64,
+        n_heads=4, n_kv_heads=4, head_dim=16, d_ff=0, vocab=256,
+        layer_pattern="MMS", ssm_state=16, ssm_expand=2, ssm_headdim=32,
+        ssd_chunk=16, shared_attn_period=3, shared_d_ff=128,
+        tie_embeddings=True)

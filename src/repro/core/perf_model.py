@@ -1,0 +1,106 @@
+"""The performance-loss predictor (Section 5.2, Eq. 1).
+
+A piecewise-linear OLS model of performance loss as a function of memory
+latency (tRAS + tRP, the actuated quantity), the application's MPKI, and its
+memory stall-time fraction — with the piece boundary at MPKI = 15 (the
+paper's memory-intensity threshold).
+
+    PredictedLoss_i = a1 + b1*Latency_i + b2*MPKI_i + b3*StallFrac_i   (MPKI < 15)
+    PredictedLoss_i = a2 + b4*Latency_i + b5*MPKI_i + b6*StallFrac_i   (MPKI >= 15)
+
+The training data is generated exactly the way the paper does it: 27
+workloads x 8 voltage levels (1.30 V down to 0.95 V in 50 mV steps) = 216
+samples, split 151/65 train/test, reporting RMSE and R^2 per piece.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+from repro.dram import circuit
+from repro.memsim import system, workloads
+from repro.memsim.workloads import MEM_INTENSIVE_MPKI
+
+# 8 evaluated voltage levels (216 = 27 x 8 samples, Section 5.2)
+TRAIN_VOLTAGES = [1.30, 1.25, 1.20, 1.15, 1.10, 1.05, 1.00, 0.95]
+
+
+def latency_feature(v_array: float) -> float:
+    """The paper's Latency input: tRAS + tRP at the operating voltage."""
+    t = circuit.timing_for_voltage(v_array)
+    return t.t_ras + t.t_rp
+
+
+@dataclasses.dataclass(frozen=True)
+class PiecewiseLinearModel:
+    coef_low: np.ndarray      # [a1, b1(latency), b2(mpki), b3(stall)]
+    coef_high: np.ndarray
+    rmse_low: float
+    rmse_high: float
+    r2_low: float
+    r2_high: float
+
+    def predict(self, latency_ns, mpki, stall_frac) -> np.ndarray:
+        latency_ns, mpki, stall = np.broadcast_arrays(
+            np.asarray(latency_ns, float), np.asarray(mpki, float),
+            np.asarray(stall_frac, float))
+        x = np.stack([np.ones_like(mpki), latency_ns, mpki, stall], -1)
+        lo = x @ self.coef_low
+        hi = x @ self.coef_high
+        return np.where(mpki < MEM_INTENSIVE_MPKI, lo, hi)
+
+
+def _dataset():
+    """(latency, mpki, stall_frac, loss_pct) over 27 workloads x 8 levels."""
+    rows = []
+    for name, cores in workloads.homogeneous_workloads():
+        base = system.simulate(cores)
+        mpki = cores[0].mpki
+        stall = float(np.mean(base.stall_frac))
+        for v in TRAIN_VOLTAGES:
+            cmp_ = system.evaluate(cores, system.voltron_point(v))
+            rows.append((latency_feature(v), mpki, stall,
+                         cmp_.perf_loss_pct))
+    return np.asarray(rows)
+
+
+def _ols(x: np.ndarray, y: np.ndarray):
+    coef, *_ = np.linalg.lstsq(x, y, rcond=None)
+    return coef
+
+
+@functools.lru_cache(maxsize=1)
+def fit(seed: int = 0, train_frac: float = 0.70) -> PiecewiseLinearModel:
+    """Fit Eq. 1 with a 151/65 train/test split; metrics are on test data."""
+    data = _dataset()
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(len(data))
+    n_train = int(round(train_frac * len(data)))       # 151 of 216
+    tr, te = idx[:n_train], idx[n_train:]
+
+    def piece(rows, mask_fn):
+        m = mask_fn(rows[:, 1])
+        x = np.concatenate([np.ones((m.sum(), 1)), rows[m][:, :3]], axis=1)
+        return x, rows[m][:, 3]
+
+    lo_fn = lambda mpki: mpki < MEM_INTENSIVE_MPKI
+    hi_fn = lambda mpki: mpki >= MEM_INTENSIVE_MPKI
+    x_lo, y_lo = piece(data[tr], lo_fn)
+    x_hi, y_hi = piece(data[tr], hi_fn)
+    c_lo, c_hi = _ols(x_lo, y_lo), _ols(x_hi, y_hi)
+
+    def metrics(rows, coef, mask_fn):
+        x, y = piece(rows, mask_fn)
+        if len(y) == 0:
+            return 0.0, 1.0
+        pred = x @ coef
+        rmse = float(np.sqrt(np.mean((pred - y) ** 2)))
+        ss_res = float(np.sum((pred - y) ** 2))
+        ss_tot = float(np.sum((y - y.mean()) ** 2)) or 1e-12
+        return rmse, 1.0 - ss_res / ss_tot
+
+    rmse_lo, r2_lo = metrics(data[te], c_lo, lo_fn)
+    rmse_hi, r2_hi = metrics(data[te], c_hi, hi_fn)
+    return PiecewiseLinearModel(c_lo, c_hi, rmse_lo, rmse_hi, r2_lo, r2_hi)

@@ -1,0 +1,154 @@
+"""Voltron: performance-aware DRAM array voltage control (Section 5).
+
+Two components:
+
+1. *Array voltage scaling* — reduce only ``V_array`` (the peripheral rail
+   and hence the channel frequency stay at nominal), compensating with the
+   Table 3 latencies from the circuit model.  Modeled by
+   :func:`repro.memsim.system.voltron_point`.
+
+2. *Performance-aware voltage control* (Algorithm 1) — at the end of every
+   profiling interval, predict the performance loss of each candidate
+   voltage with the piecewise-linear model and select the smallest
+   ``V_array`` whose predicted loss stays within the user target.
+
+``run_controller`` executes the interval loop against the memsim substrate,
+including optional workload phase variation (which is what makes the
+profile-interval length matter — Fig. 19).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro import hw
+from repro.core import perf_model
+from repro.memsim import system, workloads
+
+# Algorithm 1 candidates: every 0.05 V from 0.90 to 1.30; 1.35 is the
+# fallback when nothing satisfies the target.
+CANDIDATE_VOLTAGES = [round(0.90 + 0.05 * i, 2) for i in range(9)]  # 0.9..1.3
+DEFAULT_TARGET_PCT = 5.0
+DEFAULT_INTERVAL_CYCLES = 4_000_000     # Section 6.3
+
+
+def select_array_voltage(model: perf_model.PiecewiseLinearModel,
+                         mpki: float, stall_frac: float,
+                         target_loss_pct: float = DEFAULT_TARGET_PCT) -> float:
+    """Algorithm 1: smallest candidate V_array within the loss target."""
+    next_v = hw.VDD_NOMINAL
+    for v in CANDIDATE_VOLTAGES:                       # ascending from 0.90
+        lat = perf_model.latency_feature(v)
+        pred = float(model.predict(lat, mpki, stall_frac))
+        if pred <= target_loss_pct:
+            next_v = v
+            break                                       # smallest V wins
+    return next_v
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerRun:
+    workload: str
+    target_loss_pct: float
+    selected_voltages: np.ndarray          # per interval
+    perf_loss_pct: float                   # realized, vs 1.35 V baseline
+    dram_power_savings_pct: float
+    dram_energy_savings_pct: float
+    system_energy_savings_pct: float
+    perf_per_watt_gain_pct: float
+    met_target: bool
+
+
+def _phase_factors(n_intervals: int, seed: int, phase_len: int = 5,
+                   amplitude: float = 0.15) -> np.ndarray:
+    """Piecewise-constant workload phase modulation of memory intensity."""
+    rng = np.random.default_rng(seed)
+    n_phases = max(1, int(np.ceil(n_intervals / phase_len)))
+    factors = 1.0 + amplitude * rng.uniform(-1.0, 1.0, n_phases)
+    return np.repeat(factors, phase_len)[:n_intervals]
+
+
+def run_controller(name: str, cores: tuple,
+                   target_loss_pct: float = DEFAULT_TARGET_PCT,
+                   n_intervals: int = 25,
+                   interval_cycles: int = DEFAULT_INTERVAL_CYCLES,
+                   model: perf_model.PiecewiseLinearModel | None = None,
+                   bank_locality: bool = False,
+                   phase_seed: int | None = None,
+                   phase_amplitude: float = 0.15) -> ControllerRun:
+    """Execute Voltron's interval loop on one multiprogrammed workload.
+
+    Each interval: profile (MPKI, stall fraction) under the *current*
+    voltage -> Algorithm 1 -> apply the chosen voltage for the next
+    interval.  Realized loss/energy aggregate the per-interval simulations
+    against the nominal baseline.
+
+    ``interval_cycles`` scales how many intervals a phase spans: longer
+    intervals react more slowly to phase changes (Fig. 19).
+    """
+    model = model or perf_model.fit()
+    import dataclasses as dc
+
+    phase_len_cycles = 5 * DEFAULT_INTERVAL_CYCLES
+    phase_len = max(1, int(round(phase_len_cycles / interval_cycles)))
+    if phase_seed is None:
+        import zlib
+        phase_seed = zlib.crc32(name.encode())    # deterministic across runs
+    phases = _phase_factors(n_intervals, phase_seed, phase_len,
+                            phase_amplitude)
+
+    v = hw.VDD_NOMINAL
+    chosen = []
+    base_ws = base_power = base_dram_p = base_dram_e = base_sys_e = 0.0
+    pt_ws = pt_power = pt_dram_e = pt_sys_e = pt_dram_p = 0.0
+    for i in range(n_intervals):
+        f = phases[i]
+        ph_cores = tuple(dc.replace(b, mpki=b.mpki * f) for b in cores)
+        op = _operating_point(v, bank_locality)
+        base = system.simulate(ph_cores)
+        pt = system.simulate(ph_cores, op)
+        base_ws += base.ws
+        pt_ws += pt.ws
+        base_dram_e += base.energy_j["dram"]
+        base_sys_e += base.energy_j["system"]
+        pt_dram_e += pt.energy_j["dram"]
+        pt_sys_e += pt.energy_j["system"]
+        base_power += base.power.system_w
+        pt_power += pt.power.system_w
+        pt_dram_p += pt.power.dram_w
+        base_dram_p += base.power.dram_w
+        # profile under the current operating point, then Algorithm 1
+        mpki = float(np.mean([b.mpki for b in ph_cores]))
+        stall = float(np.mean(pt.stall_frac))
+        v = select_array_voltage(model, mpki, stall, target_loss_pct)
+        chosen.append(v)
+
+    loss = 100.0 * (1.0 - pt_ws / base_ws)
+    dram_p = 100.0 * (1.0 - pt_dram_p / base_dram_p)
+    dram_e = 100.0 * (1.0 - pt_dram_e / base_dram_e)
+    sys_e = 100.0 * (1.0 - pt_sys_e / base_sys_e)
+    ppw = 100.0 * ((pt_ws / pt_power) / (base_ws / base_power) - 1.0)
+    return ControllerRun(name, target_loss_pct, np.asarray(chosen), loss,
+                         dram_p, dram_e, sys_e, ppw,
+                         met_target=loss <= target_loss_pct + 1e-9)
+
+
+def _operating_point(v: float, bank_locality: bool) -> system.OperatingPoint:
+    if not bank_locality:
+        return system.voltron_point(v)
+    from repro.core import bank_locality as bl
+    return system.voltron_point(v, fast_bank_frac=bl.fast_bank_fraction(v))
+
+
+def evaluate_suite(target_loss_pct: float = DEFAULT_TARGET_PCT,
+                   heterogeneous: bool = False,
+                   bank_locality: bool = False,
+                   n_intervals: int = 25) -> list:
+    """Run the controller over the paper's workload suite (Fig. 14 / 17)."""
+    wls = (workloads.heterogeneous_workloads() if heterogeneous
+           else workloads.homogeneous_workloads())
+    return [run_controller(n, c, target_loss_pct,
+                           bank_locality=bank_locality,
+                           n_intervals=n_intervals)
+            for n, c in wls]

@@ -1,0 +1,93 @@
+"""Deterministic, restartable, sharded synthetic-token pipeline.
+
+Every batch is a pure function of (seed, step, host slice): restarting from
+a checkpoint at step k reproduces the identical remaining stream with no
+pipeline state to save.  Hosts materialize only their local slice of the
+global batch (addressable-shard feeding, the multi-host pattern), with a
+background prefetch thread to overlap batch synthesis with the step.
+
+The synthetic distribution is a Zipfian unigram stream with short Markov
+repeats — enough structure that a 100M-param model's loss visibly drops
+(the end-to-end training example's acceptance test).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+    repeat_p: float = 0.35         # P(copy a token from 8 back)
+
+
+class SyntheticTokens:
+    """Iterator over (tokens, labels) numpy batches for one host."""
+
+    def __init__(self, cfg: DataConfig, host_index: int = 0,
+                 host_count: int = 1, prefetch: int = 2):
+        assert cfg.global_batch % host_count == 0
+        self.cfg = cfg
+        self.host_index = host_index
+        self.host_count = host_count
+        self.local_batch = cfg.global_batch // host_count
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._step = 0
+        self._thread: threading.Thread | None = None
+
+    # ---- deterministic batch synthesis ------------------------------------
+    def batch_at(self, step: int) -> dict:
+        cfg = self.cfg
+        rows = []
+        base = cfg.seed * 1_000_003 + step
+        row0 = self.host_index * self.local_batch
+        for r in range(self.local_batch):
+            rng = np.random.default_rng((base, row0 + r))
+            toks = rng.zipf(cfg.zipf_a, cfg.seq_len + 1) % cfg.vocab
+            rep = rng.random(cfg.seq_len + 1) < cfg.repeat_p
+            for i in range(8, cfg.seq_len + 1):
+                if rep[i]:
+                    toks[i] = toks[i - 8]
+            rows.append(toks)
+        arr = np.stack(rows).astype(np.int32)
+        return {"tokens": arr[:, :-1], "labels": arr[:, 1:]}
+
+    # ---- prefetching iterator ----------------------------------------------
+    def start(self, from_step: int = 0):
+        self._step = from_step
+        self._stop.clear()
+
+        def worker():
+            s = from_step
+            while not self._stop.is_set():
+                batch = self.batch_at(s)
+                while not self._stop.is_set():
+                    try:
+                        self._q.put((s, batch), timeout=0.25)
+                        break
+                    except queue.Full:
+                        continue
+                s += 1
+
+        self._thread = threading.Thread(target=worker, daemon=True)
+        self._thread.start()
+        return self
+
+    def __next__(self):
+        s, batch = self._q.get()
+        self._step = s + 1
+        return s, batch
+
+    def stop(self):
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)

@@ -1,0 +1,16 @@
+"""DRAM characterization substrate.
+
+Simulated stand-ins for the paper's FPGA/SoftMC test platform:
+
+- :mod:`repro.dram.circuit`  — bitline/sense-amplifier dynamics and the
+  calibrated voltage→latency model (Figs. 5-7, 10; Table 3).
+- :mod:`repro.dram.timing`   — DDR3L timing-parameter bookkeeping,
+  guardbanding and controller-clock quantization.
+- :mod:`repro.dram.chips`    — the 31-DIMM / 124-chip population model
+  (Table 7; Figs. 4, 11).
+- :mod:`repro.dram.errors`   — voltage-induced bit-error injection, spatial
+  clustering, beat-density and ECC analysis (Figs. 8, 9).
+- :mod:`repro.dram.test1`    — the paper's Test 1 row-walk procedure.
+"""
+# Submodules are imported lazily by users to keep import costs low:
+#   from repro.dram import circuit, chips, errors, test1, timing

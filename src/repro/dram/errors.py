@@ -1,0 +1,122 @@
+"""Bit-level voltage-error injection and spatial/ECC analysis.
+
+Bridges the closed-form population model (:mod:`repro.dram.chips`) to
+concrete bit flips in simulated DIMM contents:
+
+- :func:`error_probability_map` — per-(bank, row-group) line-error
+  probabilities (Fig. 8 / Appendix D spatial maps).
+- :func:`inject_row_errors` — corrupt a [rows, words] uint32 plane with the
+  voltage-error model (dispatches to the ``voltage_inject`` kernel).
+- :func:`secded_outcomes` — what SECDED ECC would do to the observed beat
+  error densities (Section 4.4 conclusion: SECDED is unlikely to help).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import hw
+from repro.dram import chips
+from repro.kernels.voltage_inject import ops as inject_ops
+
+
+def error_probability_map(dimm: chips.DIMM, v: float, t_rcd: float = 10.0,
+                          t_rp: float = 10.0, temp_c: float = 20.0) -> np.ndarray:
+    """P(row has >=1 erroneous line) per (bank, row-group), shape [8, 256].
+
+    This is the quantity plotted in Fig. 8 (probability of each row
+    experiencing at least one bit error), evaluated in closed form from the
+    susceptibility field.
+    """
+    field = dimm.susceptibility                       # [banks, groups]
+    p_ok = np.ones_like(field)
+    for op, t_prog in (("rcd", t_rcd), ("rp", t_rp)):
+        req = float(np.asarray(dimm.required_latency(op, v, temp_c)))
+        x_thr = (t_prog / req - 1.0) / dimm.cell_sigma
+        p_ok_line = chips._trunc_phi(x_thr - field)
+        # a row holds LINES_PER_ROW cache lines; any line failing marks it
+        p_ok = p_ok * p_ok_line ** hw.LINES_PER_ROW
+    return 1.0 - p_ok
+
+
+def row_line_probs(dimm: chips.DIMM, v: float, t_rcd: float = 10.0,
+                   t_rp: float = 10.0, temp_c: float = 20.0) -> np.ndarray:
+    """P(one cache line is erroneous) per (bank, row-group), shape [8, 256]."""
+    field = dimm.susceptibility
+    p_ok = np.ones_like(field)
+    for op, t_prog in (("rcd", t_rcd), ("rp", t_rp)):
+        req = float(np.asarray(dimm.required_latency(op, v, temp_c)))
+        x_thr = (t_prog / req - 1.0) / dimm.cell_sigma
+        p_ok = p_ok * chips._trunc_phi(x_thr - field)
+    return 1.0 - p_ok
+
+
+def inject_row_errors(dimm: chips.DIMM, data_u32: jax.Array, bank: int,
+                      v: float, t_rcd: float = 10.0, t_rp: float = 10.0,
+                      temp_c: float = 20.0, key: jax.Array | None = None,
+                      nplanes: int = 2, impl: str = "auto") -> jax.Array:
+    """Corrupt a [rows, words] uint32 plane for one bank of a DIMM.
+
+    Rows are mapped onto the susceptibility row-groups proportionally, so a
+    reduced-geometry simulation (few rows) still reproduces the spatial
+    clustering of the full device.  ``nplanes`` sets the per-bit flip density
+    within a corrupted word to 2^-nplanes (multi-bit beats, Fig. 9).
+    """
+    rows, words = data_u32.shape
+    probs = row_line_probs(dimm, v, t_rcd, t_rp, temp_c)[bank]   # [groups]
+    groups = probs.shape[0]
+    idx = (np.arange(rows) * groups) // rows
+    # line-error prob -> per-32-bit-word corruption prob (16 words / line)
+    words_per_line = hw.CACHE_LINE_BYTES // 4
+    p_line = probs[idx]
+    p_word = 1.0 - (1.0 - p_line) ** (1.0 / words_per_line)
+    # a corrupted line concentrates its flips: boost word prob by the beat
+    # density factor (~55% of beats in a failing line are affected)
+    p_word = np.clip(p_word * 0.55 * words_per_line / 2, 0.0, 1.0)
+    if key is None:
+        key = jax.random.key(dimm.index)
+    k1, k2 = jax.random.split(key)
+    rand_word = jax.random.bits(k1, (rows, words), dtype=jnp.uint32)
+    rand_planes = jax.random.bits(k2, (nplanes, rows, words), dtype=jnp.uint32)
+    return inject_ops.inject(data_u32, jnp.asarray(p_word, jnp.float32),
+                             rand_word, rand_planes, impl=impl)
+
+
+# --------------------------------------------------------------------------
+# ECC analysis (Section 4.4)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SecdedOutcome:
+    corrected: float        # beats fully corrected (exactly 1 bad bit)
+    detected: float         # 2 bad bits: detected, not correctable
+    undetected_or_mis: float  # >2 bad bits: silent corruption possible
+    clean: float
+
+    @property
+    def still_erroneous(self) -> float:
+        return self.detected + self.undetected_or_mis
+
+
+def secded_outcomes(dimm: chips.DIMM, v: float, t_rcd: float = 10.0,
+                    t_rp: float = 10.0) -> SecdedOutcome:
+    """Apply SECDED semantics to the modeled beat-error density (Fig. 9)."""
+    dist = dimm.beat_error_distribution(v, t_rcd, t_rp)
+    one = float(np.atleast_1d(dist["one"])[0])
+    two = float(np.atleast_1d(dist["two"])[0])
+    many = float(np.atleast_1d(dist["many"])[0])
+    zero = float(np.atleast_1d(dist["zero"])[0])
+    return SecdedOutcome(corrected=one, detected=two,
+                         undetected_or_mis=many, clean=zero)
+
+
+def secded_is_sufficient(dimm: chips.DIMM, v: float, threshold: float = 0.5) -> bool:
+    """Would SECDED fix at least ``threshold`` of erroneous beats?  The
+    paper's answer (Section 4.4) is no — most failing beats have >2 flips."""
+    o = secded_outcomes(dimm, v)
+    total_bad = o.corrected + o.still_erroneous
+    if total_bad == 0:
+        return True
+    return o.corrected / total_bad >= threshold

@@ -1,0 +1,124 @@
+"""The paper's Test 1: walk every row, write data / inverted-data into
+consecutive rows, read back with the specified tRCD/tRP, count errors.
+
+The inverted pattern in the *next* row matters because a shortened precharge
+leaves the bitlines biased toward the previous row's values; using the
+inverse ensures the partially-precharged state does not unfairly favor the
+next activation (Section 3).  In the simulation this shows up as the
+precharge-margin term applying to the *transition* between opposite values,
+which is exactly what the injected error probabilities model.
+
+A full 2 GB DIMM has 32M cache lines; simulation uses a reduced geometry
+(default 8 banks x 64 rows x 4 KiB rows) whose rows are mapped onto the
+full device's susceptibility field, so spatial structure is preserved.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dram import chips, errors
+
+DATA_PATTERNS = {
+    "0x00": 0x00000000, "0xff": 0xFFFFFFFF,
+    "0xaa": 0xAAAAAAAA, "0x33": 0x33333333,
+    "0xcc": 0xCCCCCCCC, "0x55": 0x55555555,
+}
+# The paper's three (data, ~data) groups (Section 3).
+PATTERN_GROUPS = [("0x00", "0xff"), ("0xaa", "0x33"), ("0xcc", "0x55")]
+
+
+@dataclasses.dataclass(frozen=True)
+class Test1Result:
+    dimm: str
+    voltage: float
+    t_rcd: float
+    t_rp: float
+    pattern: str
+    bit_errors: int
+    total_bits: int
+    erroneous_lines: int
+    total_lines: int
+    error_rows: np.ndarray          # [banks, rows] bool
+
+    @property
+    def ber(self) -> float:
+        return self.bit_errors / self.total_bits
+
+    @property
+    def line_error_fraction(self) -> float:
+        return self.erroneous_lines / self.total_lines
+
+
+def run(dimm: chips.DIMM, voltage: float, t_rcd: float = 10.0,
+        t_rp: float = 10.0, pattern_group=("0xaa", "0x33"), *,
+        banks: int = 8, rows: int = 64, row_bytes: int = 4096,
+        temp_c: float = 20.0, seed: int = 0, impl: str = "auto") -> Test1Result:
+    """One round of Test 1 on a reduced-geometry simulated DIMM."""
+    words = row_bytes // 4
+    pat, pat_inv = (DATA_PATTERNS[p] for p in pattern_group)
+    key = jax.random.key(seed * 1000003 + dimm.index)
+
+    bit_errors = 0
+    bad_lines = 0
+    err_rows = np.zeros((banks, rows), dtype=bool)
+    words_per_line = 16                          # 64B line = 16 words
+    for bank in range(banks):
+        # write data into even rows, ~data into odd rows (Test 1 lines 4-5)
+        vals = np.where(np.arange(rows)[:, None] % 2 == 0, pat, pat_inv)
+        data = jnp.asarray(np.broadcast_to(vals, (rows, words)).copy(),
+                           dtype=jnp.uint32)
+        key, sub = jax.random.split(key)
+        got = errors.inject_row_errors(dimm, data, bank, voltage, t_rcd, t_rp,
+                                       temp_c, key=sub, impl=impl)
+        diff = np.asarray(got ^ data)
+        flips = _popcount32(diff)
+        bit_errors += int(flips.sum())
+        line_bad = flips.reshape(rows, -1, words_per_line).sum(-1) > 0
+        bad_lines += int(line_bad.sum())
+        err_rows[bank] = flips.sum(axis=1) > 0
+    total_bits = banks * rows * words * 32
+    total_lines = banks * rows * (words // words_per_line)
+    return Test1Result(dimm.module, voltage, t_rcd, t_rp,
+                       "/".join(pattern_group), bit_errors, total_bits,
+                       bad_lines, total_lines, err_rows)
+
+
+def voltage_sweep(dimm: chips.DIMM, voltages, t_rcd: float = 10.0,
+                  t_rp: float = 10.0, rounds: int = 1, **kw):
+    """Test 1 across a voltage sweep (the Section 4.1 experiment)."""
+    out = []
+    for v in voltages:
+        for r in range(rounds):
+            out.append(run(dimm, float(v), t_rcd, t_rp, seed=r, **kw))
+    return out
+
+
+def find_min_latency(dimm: chips.DIMM, voltage: float, *, step: float = 2.5,
+                     max_latency: float = 20.0, temp_c: float = 20.0):
+    """The Section 4.2 experiment: smallest (tRCD, tRP) on the platform's
+    2.5 ns grid with zero errors, or None if none <= max_latency works."""
+    grid = np.arange(10.0, max_latency + 1e-9, step)
+    vm = chips.circuit.VENDORS[dimm.vendor]
+    if voltage < vm.recovery_floor:
+        return None
+    best = None
+    for t_rcd in grid:
+        for t_rp in grid:
+            frac = dimm.line_error_fraction(voltage, t_rcd, t_rp, temp_c)
+            if float(frac[0]) <= 0.0:
+                cand = (float(t_rcd), float(t_rp))
+                if best is None or sum(cand) < sum(best):
+                    best = cand
+    return best
+
+
+def _popcount32(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.uint32)
+    x = x - ((x >> 1) & 0x55555555)
+    x = (x & 0x33333333) + ((x >> 2) & 0x33333333)
+    x = (x + (x >> 4)) & 0x0F0F0F0F
+    return ((x * 0x01010101) >> 24).astype(np.int64)

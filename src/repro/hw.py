@@ -1,0 +1,83 @@
+"""Hardware constants for the two hardware domains this framework spans.
+
+1. The paper's domain: DDR3L DRAM (JESD79-3-1A.01) driven by an FPGA memory
+   controller at 800 MT/s.  These constants parameterize the characterization
+   substrate (`repro.dram`) and the Ramulator-style simulator (`repro.memsim`).
+
+2. The deployment domain: a TPU v5e-class pod (the dry-run / roofline
+   target).  These constants parameterize `repro.roofline` and the Voltron
+   HBM adaptation layer (`repro.core.hbm_adapter`).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# --------------------------------------------------------------------------
+# TPU v5e-class chip (roofline target; see system brief)
+# --------------------------------------------------------------------------
+TPU_PEAK_FLOPS_BF16 = 197e12     # FLOP/s per chip
+TPU_HBM_BW = 819e9               # bytes/s per chip
+TPU_ICI_BW = 50e9                # bytes/s per link
+TPU_HBM_BYTES = 16 * 1024**3     # 16 GiB HBM per chip
+TPU_VMEM_BYTES = 128 * 1024**2   # ~128 MiB VMEM per chip (v5e-class)
+
+# Mesh shape of the production target.
+PODS = 2
+POD_SHAPE = (16, 16)             # (data, model) within one pod
+CHIPS_PER_POD = POD_SHAPE[0] * POD_SHAPE[1]
+
+# --------------------------------------------------------------------------
+# DDR3L (the paper's device under test)
+# --------------------------------------------------------------------------
+VDD_NOMINAL = 1.35               # V  (JESD79-3-1A.01 nominal)
+VDD_SPEC_MIN = 1.283             # V  (DDR3L allowed deviation, Section 2.3)
+VDD_SPEC_MAX = 1.45              # V
+VDD_SWEEP_FLOOR = 0.90           # V  (lowest voltage evaluated by the paper)
+
+DDR3L_DATA_RATE = 1600           # MT/s (DIMM rating)
+FPGA_DATA_RATE = 800             # MT/s (test-platform limit, Section 3)
+DDR3L_CLK_NS = 1.25              # ns per controller clock at 1600 MT/s
+BEAT_BITS = 64                   # data-bus width per beat (Section 4.4)
+CACHE_LINE_BYTES = 64
+BEATS_PER_LINE = CACHE_LINE_BYTES * 8 // BEAT_BITS   # 8 beats / line
+LINES_PER_ROW = 128              # 8 KB row = 128 x 64 B lines (Section 2.1)
+
+BANKS_PER_RANK = 8
+ROWS_PER_BANK = 32 * 1024        # Section 4.3 (32K rows/bank)
+DIMM_BYTES = 2 * 1024**3         # 2 GB DIMMs (Table 1)
+CHIPS_PER_DIMM = 4               # x16 chips (Table 7)
+
+REFRESH_INTERVAL_MS = 64.0       # DDR3 worst-case retention assumption
+GUARDBAND = 1.38                 # manufacturer latency guardband (Section 6.1)
+
+# Standard DDR3L timings in ns (Table 1): tRCD / tRP / tRAS.
+T_RCD_STD = 13.75
+T_RP_STD = 13.75
+T_RAS_STD = 35.0
+T_CL_STD = 13.75                 # CAS latency (DRAM-internal, not retimable)
+T_CWL_STD = 10.0
+
+# Reliable minimum latencies found at 20 C / 1.35 V (Section 4.1).
+T_RCD_RELIABLE_MIN = 10.0
+T_RP_RELIABLE_MIN = 10.0
+
+# Experimental platform latency granularity (SoftMC), ns.
+PLATFORM_LATENCY_STEP = 2.5
+
+# DRAM power model split (array vs peripheral), used by memsim.energy.
+# Calibrated so the baseline system-energy breakdown reproduces Fig. 15.
+ARRAY_POWER_FRACTION = 0.60      # fraction of DRAM power in the array domain
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuSpec:
+    """Roofline constants for one accelerator chip."""
+
+    peak_flops: float = TPU_PEAK_FLOPS_BF16
+    hbm_bw: float = TPU_HBM_BW
+    ici_bw: float = TPU_ICI_BW
+    hbm_bytes: int = TPU_HBM_BYTES
+    vmem_bytes: int = TPU_VMEM_BYTES
+
+
+TPU_V5E = TpuSpec()

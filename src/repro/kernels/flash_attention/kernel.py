@@ -1,0 +1,104 @@
+"""Pallas TPU flash attention (forward), GQA + window + softcap.
+
+Streaming-softmax tiling: grid = (B*H, Sq/BQ, Sk/BK) with the KV axis as
+the innermost ("arbitrary") dimension; running max/denominator and the
+output accumulator live in VMEM scratch across KV steps, so the [Sq, Sk]
+score matrix never exists — scores are materialized one [BQ, BK] MXU tile
+at a time.
+
+VMEM budget per grid step (BQ=BK=512, hd=256, bf16 in / f32 acc):
+q 256 KiB + k/v 512 KiB + acc 512 KiB + stats 4 KiB  ~ 1.3 MiB  << VMEM.
+Block shapes keep the last dim a multiple of 128 (lane width) and the
+second-to-last a multiple of 8 (sublane), MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 512
+DEFAULT_BK = 512
+NEG_INF = -1e30
+
+
+def _fa_kernel(causal, window, softcap, scale, bq, bk, n_k,
+               q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                  # [BQ, hd]
+    k = k_ref[0].astype(jnp.float32)                  # [BK, hd]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    d = qpos - kpos
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= d >= 0
+    if window is not None:
+        mask &= d < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                               # [BQ, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                            # [BQ, BK]
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    v = v_ref[0].astype(jnp.float32)                  # [BK, hd]
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        o_ref[0, ...] = (acc_ref[...]
+                         / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "softcap", "bq", "bk",
+                              "interpret"))
+def flash_attention_bhsd(q, k, v, *, causal=True, window=None, softcap=None,
+                         bq=DEFAULT_BQ, bk=DEFAULT_BK, interpret=False):
+    """q: [BH, Sq, hd]; k/v: [BH, Sk, hd] (kv heads pre-broadcast to H)."""
+    bh, sq, hd = q.shape
+    sk = k.shape[1]
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    n_k = sk // bk
+    grid = (bh, sq // bq, n_k)
+    kernel = functools.partial(_fa_kernel, causal, window, softcap,
+                               1.0 / (hd ** 0.5), bq, bk, n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),     # output accumulator
+            pltpu.VMEM((bq, 1), jnp.float32),      # running max
+            pltpu.VMEM((bq, 1), jnp.float32),      # running denominator
+        ],
+        interpret=interpret,
+    )(q, k, v)

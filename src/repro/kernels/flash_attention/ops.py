@@ -1,0 +1,34 @@
+"""jit'd public wrapper: GQA layout handling around the flash kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as _kernel
+from repro.kernels.flash_attention import ref as _ref
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    impl: str = "auto", bq=None, bk=None):
+    """q: [B, Sq, H, hd]; k/v: [B, Sk, KV, hd] -> [B, Sq, H, hd]."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "reference"
+    if impl == "reference":
+        return _ref.attention_ref(q, k, v, causal=causal, window=window,
+                                  softcap=softcap)
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    # broadcast KV heads to H and flatten (B, H) into the kernel grid axis
+    kb = jnp.repeat(k, g, axis=2).transpose(0, 2, 1, 3).reshape(b * h, -1, hd)
+    vb = jnp.repeat(v, g, axis=2).transpose(0, 2, 1, 3).reshape(b * h, -1, hd)
+    qb = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kwargs = {}
+    if bq:
+        kwargs["bq"] = bq
+    if bk:
+        kwargs["bk"] = bk
+    out = _kernel.flash_attention_bhsd(
+        qb, kb, vb, causal=causal, window=window, softcap=softcap,
+        interpret=(impl == "pallas_interpret"), **kwargs)
+    return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for fused GQA flash attention.
+
+Semantics: grouped-query attention with optional causal mask, sliding
+window and gemma2-style logit softcapping; softmax in f32.
+q: [B, Sq, H, hd]; k/v: [B, Sk, KV, hd]; H % KV == 0.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
+                  q_offset: int = 0):
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    s = s / (hd ** 0.5)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    d = qpos[:, None] - kpos[None, :]
+    m = jnp.zeros((sq, sk), jnp.float32)
+    if causal:
+        m = jnp.where(d < 0, -jnp.inf, m)
+    if window is not None:
+        m = jnp.where(d >= window, -jnp.inf, m)
+    s = s + m[None, None, None]
+    w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(b, sq, h, hd)

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel for the Mamba2 SSD intra-chunk computation.
+
+The SSD algorithm splits the recurrence into (i) an O(L^2) intra-chunk
+attention-like term + per-chunk state summaries — this kernel — and (ii) a
+cheap sequential inter-chunk recurrence + rank-1 correction handled in
+ops.py with lax.scan/einsum.
+
+Grid: (batch, n_chunks, heads); per step the kernel holds one chunk of one
+head in VMEM:  C,B: [L, N]; dtx: [L, P]; cum: [L, 1].  With L=256, N=128,
+P=64 (mamba2-2.7b) that is ~350 KiB — VMEM-resident, and the two matmuls
+(CB^T: LxNxL, (cb*decay)@dtx: LxLxP) are MXU-shaped.  The [L, L] decay
+tile never leaves VMEM — on HBM this is the term that makes the pure-XLA
+SSD memory-bound (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_BIG = -1e30
+
+
+def _ssd_kernel(length, c_ref, b_ref, dtx_ref, cum_ref, y_ref, st_ref):
+    c = c_ref[0, 0].astype(jnp.float32)           # [L, N]
+    b = b_ref[0, 0].astype(jnp.float32)           # [L, N]
+    dtx = dtx_ref[0, 0].astype(jnp.float32)       # [L, P]
+    cum = cum_ref[0, 0].astype(jnp.float32)       # [L, 1]
+
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [L, L]
+    rel = cum - cum.T                              # cum_i - cum_j
+    ii = jax.lax.broadcasted_iota(jnp.int32, (length, length), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (length, length), 1)
+    decay = jnp.where(ii >= jj, jnp.exp(rel), 0.0)
+    y = jax.lax.dot_general(cb * decay, dtx, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # [L, P]
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    # chunk state: sum_j exp(cum_L - cum_j) * B_j (x) dtx_j   -> [N, P]
+    w = jnp.exp(cum[-1:] - cum)                    # [L, 1]
+    st = jax.lax.dot_general(b * w, dtx, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    st_ref[0, 0] = st.astype(st_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk(c_mat, b_mat, dtx, cum, *, interpret=False):
+    """c/b: [B, NC, L, N]; dtx: [B, NC, L, P]; cum: [B, NC, L, 1] per head
+    already selected — callers vmap/loop the head axis via the grid by
+    passing [B*H, NC, ...]."""
+    bh, nc, length, n = b_mat.shape
+    p = dtx.shape[-1]
+    grid = (bh, nc)
+    kernel = functools.partial(_ssd_kernel, length)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, length, n), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, length, n), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, length, p), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, length, 1), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, length, p), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, nc, length, p), jnp.float32),
+            jax.ShapeDtypeStruct((bh, nc, n, p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(c_mat, b_mat, dtx, cum)

@@ -1,0 +1,61 @@
+"""jit'd SSD wrapper: Pallas intra-chunk kernel + jnp inter-chunk scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan import kernel as _kernel
+
+
+def ssd(x, a, b_mat, c_mat, dt, d_skip, chunk: int, impl: str = "auto"):
+    """Same contract as repro.models.ssm.ssd_chunked (without state return).
+
+    x: [B, S, H, P]; a: [H]; b_mat/c_mat: [B, S, N]; dt: [B, S, H].
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "reference"
+    if impl == "reference":
+        from repro.models.ssm import ssd_chunked
+        return ssd_chunked(x, a, b_mat, c_mat, dt, d_skip, chunk)
+    interpret = impl == "pallas_interpret"
+
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    # head-major layout: [B*H, NC, L, *]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    dtx = (xf * dtf[..., None]).transpose(0, 2, 1, 3) \
+        .reshape(bsz * h, nc, chunk, p)
+    # within-chunk inclusive cumsum of the per-step log-decay
+    log_dec = (dtf * a[None, None, :]).transpose(0, 2, 1) \
+        .reshape(bsz * h, nc, chunk)
+    cum_h = jnp.cumsum(log_dec, axis=2)[..., None]        # [BH, NC, L, 1]
+    bb = jnp.broadcast_to(b_mat[:, None].astype(jnp.float32),
+                          (bsz, h, s, n)).reshape(bsz * h, nc, chunk, n)
+    cc = jnp.broadcast_to(c_mat[:, None].astype(jnp.float32),
+                          (bsz, h, s, n)).reshape(bsz * h, nc, chunk, n)
+
+    y_intra, chunk_state = _kernel.ssd_intra_chunk(cc, bb, dtx, cum_h,
+                                                   interpret=interpret)
+
+    # inter-chunk recurrence (sequential over chunks, [B*H, N, P] state)
+    local = cum_h                                         # already per-chunk
+    chunk_decay = jnp.exp(local[:, :, -1, 0])             # [BH, NC]
+
+    def scan_fn(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, None, None] + st
+        return new, carry
+
+    _, states_in = jax.lax.scan(
+        scan_fn, jnp.zeros((bsz * h, n, p), jnp.float32),
+        (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    states_in = jnp.moveaxis(states_in, 0, 1)             # [BH, NC, N, P]
+    y_inter = jnp.einsum("bcln,bclo,bcnp->bclp", cc, jnp.exp(local),
+                         states_in)
+
+    y = (y_intra + y_inter).reshape(bsz, h, s, p).transpose(0, 2, 1, 3)
+    y = y + xf * d_skip[None, None, :, None]
+    return y.astype(x.dtype)

@@ -1,0 +1,4 @@
+"""Oracle for the SSD scan: the sequential state-space recurrence
+(re-exported from the model's reference implementation so the kernel and
+the model pin the same semantics)."""
+from repro.models.ssm import ssd_ref  # noqa: F401

@@ -1,0 +1,6 @@
+"""Voltage-induced bit-error injection over data tiles.
+
+``ops.inject`` is the public entry point; it dispatches to the Pallas TPU
+kernel (``kernel.py``) or the pure-jnp oracle (``ref.py``).
+"""
+from repro.kernels.voltage_inject.ops import inject  # noqa: F401

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel for voltage-error bit injection.
+
+The Test-1 characterization sweep touches every cache line of a DIMM for
+every (voltage, latency, data-pattern, round) combination — on the real
+FPGA platform this is hours of wall time, and in simulation it is the hot
+loop of the characterization substrate.  The kernel tiles the (rows x words)
+data plane into VMEM blocks and applies the corruption mask with pure
+integer ops (compare / AND / XOR), which map onto the TPU VPU lanes.
+
+Tiling: rows x words blocks of (8, 1024) uint32 = 32 KiB per operand block,
+five operands resident -> ~160 KiB of VMEM per grid step, well inside the
+~16 MiB VMEM budget while keeping the lane dimension (1024 words = 8 x 128
+lanes) MXU/VPU aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 8
+WORD_BLOCK = 1024
+
+
+def _inject_kernel(nplanes: int, data_ref, prob_ref, rand_ref, planes_ref,
+                   out_ref):
+    data = data_ref[...]
+    prob = prob_ref[...]                       # [ROW_BLOCK]
+    u = (rand_ref[...] >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0 ** -24)
+    bad = (u < prob[:, None]).astype(jnp.uint32)
+    flip = planes_ref[0]
+    for i in range(1, nplanes):
+        flip = flip & planes_ref[i]
+    out_ref[...] = data ^ (flip * bad)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def inject_pallas(data, row_prob, rand_word, rand_planes, *, interpret=False):
+    r, w = data.shape
+    p = rand_planes.shape[0]
+    if r % ROW_BLOCK or w % WORD_BLOCK:
+        raise ValueError(f"shape {(r, w)} must tile by "
+                         f"({ROW_BLOCK}, {WORD_BLOCK})")
+    grid = (r // ROW_BLOCK, w // WORD_BLOCK)
+    return pl.pallas_call(
+        functools.partial(_inject_kernel, p),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_BLOCK, WORD_BLOCK), lambda i, j: (i, j)),
+            pl.BlockSpec((ROW_BLOCK,), lambda i, j: (i,)),
+            pl.BlockSpec((ROW_BLOCK, WORD_BLOCK), lambda i, j: (i, j)),
+            pl.BlockSpec((p, ROW_BLOCK, WORD_BLOCK), lambda i, j: (0, i, j)),
+        ],
+        out_specs=pl.BlockSpec((ROW_BLOCK, WORD_BLOCK), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, w), jnp.uint32),
+        interpret=interpret,
+    )(data, row_prob, rand_word, rand_planes)

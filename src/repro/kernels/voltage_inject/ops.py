@@ -1,0 +1,27 @@
+"""jit'd public wrapper for voltage-error injection.
+
+On CPU (this container) the Pallas kernel runs in interpret mode, which is
+slower than plain jnp — so the default implementation is the oracle, and the
+kernel is selected with ``impl='pallas'`` (TPU) or ``impl='pallas_interpret'``
+(validation).  All three paths are bit-identical.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.voltage_inject import kernel as _kernel
+from repro.kernels.voltage_inject import ref as _ref
+
+
+def inject(data, row_prob, rand_word, rand_planes, impl: str = "auto"):
+    """Flip bits in ``data`` per the voltage-error model.  See ref.py."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "reference"
+    if impl == "reference":
+        return jax.jit(_ref.inject_ref)(data, row_prob, rand_word, rand_planes)
+    if impl == "pallas":
+        return _kernel.inject_pallas(data, row_prob, rand_word, rand_planes)
+    if impl == "pallas_interpret":
+        return _kernel.inject_pallas(data, row_prob, rand_word, rand_planes,
+                                     interpret=True)
+    raise ValueError(f"unknown impl {impl!r}")

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for voltage-error bit injection.
+
+Semantics (shared exactly with the Pallas kernel):
+
+- ``data``      uint32[R, W]  — R rows of W 32-bit words.
+- ``row_prob``  float32[R]    — per-row word-corruption probability (derived
+  from the DIMM's spatial susceptibility field and the timing margin).
+- ``rand_word`` uint32[R, W]  — uniform random words; word w in row r is
+  corrupted iff ``(rand_word >> 8) * 2^-24 < row_prob`` (the top 24 bits are
+  exactly representable in float32, so the TPU kernel and the oracle agree
+  bit-for-bit).
+- ``rand_planes`` uint32[P, R, W] — P independent random bit-planes; the
+  per-bit flip mask inside a corrupted word is the AND of all P planes, i.e.
+  each bit flips with probability 2^-P.  (P=1 -> 0.5, P=2 -> 0.25, ...)
+  Multi-bit flips per beat are the paper's Fig. 9 observation; 2^-P is the
+  quantized per-bit density.
+
+Returns ``data ^ mask`` (uint32[R, W]).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def inject_ref(data, row_prob, rand_word, rand_planes):
+    data = data.astype(jnp.uint32)
+    p = rand_planes.shape[0]
+    u = (rand_word >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0 ** -24)
+    bad = (u < row_prob.astype(jnp.float32)[:, None]).astype(jnp.uint32)
+    flip = rand_planes[0]
+    for i in range(1, p):
+        flip = flip & rand_planes[i]
+    mask = flip * bad          # bad is 0/1; keeps flip bits where bad==1
+    return data ^ mask

@@ -1,0 +1,199 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: for the
+single-pod 16x16 mesh and the 2x16x16 multi-pod mesh, every runnable cell
+must ``.lower().compile()`` cleanly; ``memory_analysis()`` proves it fits
+and ``cost_analysis()`` + the parsed collective schedule feed the roofline
+table (EXPERIMENTS.md).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b \
+      --shape train_4k [--multi-pod] [--out artifacts/]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+# The XLA_FLAGS below MUST precede every other import (including repro.*):
+# JAX locks the device count at first backend initialization.
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import base                 # noqa: E402
+from repro.launch.mesh import make_production_mesh   # noqa: E402
+from repro.parallel import steps as steps_lib  # noqa: E402
+from repro.parallel.sharding import ShardingPolicy   # noqa: E402
+from repro.roofline import analyze             # noqa: E402
+
+
+def _compile_costs(cfg, shape, mesh, policy):
+    """lower+compile one variant; return (cost dict, coll bytes, hlo, mem,
+    timings)."""
+    t0 = time.time()
+    bundle = steps_lib.build_step(cfg, shape, mesh, policy=policy)
+    lowered = bundle.lower(mesh)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = analyze.collective_bytes(hlo)
+    mem = compiled.memory_analysis()
+    return cost, coll, hlo, mem, (t1 - t0, t2 - t1)
+
+
+def measure_costs_fd(cfg, shape, mesh, policy):
+    """Finite-difference per-layer costing on shallow *unrolled* variants.
+
+    ``cost_analysis`` counts ``lax.scan`` bodies once (verified in
+    scratch/spike_costs.py), so the full-depth scan compile cannot report
+    total FLOPs.  Instead we lower depth=1x and 2x the layer-pattern period
+    unrolled; the difference is the exact per-period cost and
+    total = base + units * per_period, units = n_layers / period.
+    """
+    period = cfg.pattern_period
+    mk = lambda k: dataclasses.replace(
+        cfg, n_layers=k * period, scan_blocks=False,
+        n_enc_layers=(k if cfg.family == "encdec" else cfg.n_enc_layers and k))
+    c1, coll1, _, _, t1 = _compile_costs(mk(1), shape, mesh, policy)
+    c2, coll2, _, _, t2 = _compile_costs(mk(2), shape, mesh, policy)
+    units = cfg.n_layers / period
+
+    def fd(key, a, b):
+        lo = float(a.get(key, 0.0)) if isinstance(a, dict) else a
+        hi = float(b.get(key, 0.0)) if isinstance(b, dict) else b
+        per = hi - lo
+        return max(lo - per, 0.0) + units * per      # base + units*per
+
+    flops = fd("flops", c1, c2)
+    bytes_ = fd("bytes accessed", c1, c2)
+    coll_total = fd(None, float(coll1["total"]), float(coll2["total"]))
+    counts = {k: round(fd(None, float(coll1["counts"][k]),
+                          float(coll2["counts"][k])), 1)
+              for k in coll1["counts"]}
+    return {"flops_per_dev": flops, "bytes_per_dev": bytes_,
+            "coll_bytes_per_dev": coll_total, "coll_counts": counts,
+            "fd_times": (t1, t2)}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             policy: ShardingPolicy | None = None, verbose: bool = True,
+             mesh=None, measure: bool = True,
+             cfg_overrides: dict | None = None) -> dict:
+    cfg = base.get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = base.SHAPES_BY_NAME[shape_name]
+    if not base.cell_is_runnable(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": "pure full-attention arch; long_500k skipped "
+                          "(see DESIGN.md)"}
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    chips = mesh.devices.size
+
+    # 1) full-depth compile (scan-blocks): the runnability deliverable +
+    #    memory analysis + collective schedule presence
+    cost_full, coll_full, hlo, mem, (lower_s, compile_s) = _compile_costs(
+        cfg, shape, mesh, policy)
+
+    # 2) per-layer finite-difference costing for the roofline terms
+    fd = measure_costs_fd(cfg, shape, mesh, policy) if measure else None
+    flops_dev = fd["flops_per_dev"] if fd else float(cost_full.get("flops", 0))
+    bytes_dev = fd["bytes_per_dev"] if fd else float(
+        cost_full.get("bytes accessed", 0))
+    coll_dev = fd["coll_bytes_per_dev"] if fd else float(coll_full["total"])
+
+    hbm = analyze.analytic_hbm_bytes(cfg, shape, mesh, policy)
+    rf = analyze.Roofline(
+        arch=cfg.name, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_flops=flops_dev * chips, hlo_bytes=hbm["total"] * chips,
+        coll_bytes_per_chip=coll_dev,
+        compute_s=flops_dev / analyze.hw.TPU_V5E.peak_flops,
+        memory_s=hbm["total"] / analyze.hw.TPU_V5E.hbm_bw,
+        collective_s=coll_dev / analyze.hw.TPU_V5E.ici_bw,
+        model_flops=analyze.model_flops(cfg, shape),
+        per_device_bytes=mem.argument_size_in_bytes + mem.temp_size_in_bytes)
+    amem = analyze.analytic_memory(cfg, shape, mesh, policy)
+    amem["hbm_traffic"] = hbm
+    amem["xla_bytes_accessed_upper_bound"] = bytes_dev
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok", "kind": shape.kind,
+        "lower_s": round(lower_s, 2), "compile_s": round(compile_s, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "analytic_per_device": amem,
+        },
+        "collectives_full_hlo": {k: v for k, v in coll_full.items()
+                                 if k != "counts"},
+        "collective_counts": (fd or {}).get("coll_counts",
+                                            coll_full["counts"]),
+        "roofline": rf.to_dict(),
+    }
+    if verbose:
+        print(f"[{arch} x {shape_name} x {mesh_name}] OK  "
+              f"full compile {compile_s:.0f}s  "
+              f"analytic mem/dev {amem['total'] / 2**30:.2f} GiB  "
+              f"dominant={rf.dominant} frac={rf.roofline_fraction:.2f}  "
+              f"terms(c/m/coll)={rf.compute_s:.2e}/{rf.memory_s:.2e}/"
+              f"{rf.collective_s:.2e}s  useful={rf.useful_flops_ratio:.2f}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    if args.all:
+        for arch in base.ARCH_IDS:
+            for shape in base.LM_SHAPES:
+                cells.append((arch, shape.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [True, False] if args.both_meshes else [args.multi_pod]
+    failures = 0
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        for arch, shape in cells:
+            tag = f"{arch}_{shape}_{'512' if multi_pod else '256'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[{tag}] cached")
+                continue
+            try:
+                res = run_cell(arch, shape, multi_pod, mesh=mesh)
+            except Exception as e:  # noqa: BLE001 — report, keep sweeping
+                failures += 1
+                res = {"arch": arch, "shape": shape, "status": "error",
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]}
+                print(f"[{tag}] FAILED: {res['error']}")
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+    print(f"done; {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,75 @@
+"""§Perf hillclimb driver: re-measure the three selected cells under
+candidate policy changes (hypothesis -> change -> measure; EXPERIMENTS.md
+§Perf records the log).
+
+  PYTHONPATH=src python -m repro.launch.hillclimb
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import json          # noqa: E402
+
+from repro.launch.dryrun import run_cell          # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.parallel.sharding import ShardingPolicy   # noqa: E402
+
+VARIANTS = [
+    # (arch, shape, tag, policy)
+    # -- qwen3 decode_32k: paper-representative memory-bound serving cell --
+    ("qwen3-4b", "decode_32k", "q_heads",
+     ShardingPolicy(attn_mode="q_heads")),                 # REFUTED (memory)
+    ("qwen3-4b", "decode_32k", "int8kv",
+     ShardingPolicy(attn_mode="seq", kv_cache_dtype="int8")),
+    ("qwen3-4b", "decode_32k", "w8kv8",
+     ShardingPolicy(attn_mode="seq", kv_cache_dtype="int8",
+                    weight_dtype="int8")),
+    # -- gemma2 long_500k: worst roofline fraction ---------------------------
+    ("gemma2-2b", "long_500k", "hd",
+     ShardingPolicy(attn_mode="hd")),                      # CONFIRMED 2.6x
+    ("gemma2-2b", "long_500k", "hd_w8kv8",
+     ShardingPolicy(attn_mode="hd", kv_cache_dtype="int8",
+                    weight_dtype="int8")),
+    # -- dbrx train_4k: most collective-bound --------------------------------
+    ("dbrx-132b", "train_4k", "mb4",
+     ShardingPolicy(attn_mode="seq", fsdp=True, microbatches=4)),
+    ("dbrx-132b", "train_4k", "mb8",
+     ShardingPolicy(attn_mode="seq", fsdp=True, microbatches=8)),
+    ("dbrx-132b", "train_4k", "group4096",
+     ShardingPolicy(attn_mode="seq", fsdp=True), {"moe_group": 4096}),
+    # winner candidate: 2D expert sharding (no FSDP gathers on experts;
+    # dense/attn weights small enough to FSDP or replicate) + mb8 for
+    # activation fit
+    ("dbrx-132b", "train_4k", "expert2d_mb8",
+     ShardingPolicy(attn_mode="seq", fsdp=True, moe_expert_2d=True,
+                    microbatches=8)),
+]
+
+
+def main():
+    out_dir = "artifacts/hillclimb"
+    os.makedirs(out_dir, exist_ok=True)
+    mesh = make_production_mesh(multi_pod=False)
+    for entry in VARIANTS:
+        arch, shape, tag, policy = entry[:4]
+        overrides = entry[4] if len(entry) > 4 else None
+        path = os.path.join(out_dir, f"{arch}_{shape}_{tag}.json")
+        if os.path.exists(path):
+            print(f"[{tag}] cached")
+            continue
+        try:
+            res = run_cell(arch, shape, policy=policy, mesh=mesh,
+                           cfg_overrides=overrides)
+            res["variant"] = tag
+        except Exception as e:  # noqa: BLE001
+            res = {"arch": arch, "shape": shape, "variant": tag,
+                   "status": "error", "error": f"{type(e).__name__}: {e}"}
+            print(f"[{tag}] FAILED: {res['error'][:200]}")
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

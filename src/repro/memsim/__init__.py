@@ -1,0 +1,17 @@
+"""Ramulator-style memory-system + core simulation substrate.
+
+The paper evaluates Voltron on Ramulator (cycle-accurate DRAM simulator)
+driving a 4-core ARM system model, with DRAMPower/McPAT energy models
+(Section 6.1, Table 2).  This package provides the JAX/numpy equivalent:
+
+- :mod:`repro.memsim.workloads`   — the 27 SPEC CPU2006 / YCSB benchmark
+  profiles (Table 4) + multiprogrammed workload construction.
+- :mod:`repro.memsim.dram_timing` — bank-state DRAM timing: an analytic
+  FR-FCFS approximation used by the sweeps and a ``lax.scan`` event
+  simulator used to validate it.
+- :mod:`repro.memsim.core`        — ROB-stall core model (CPI, MLP, WS).
+- :mod:`repro.memsim.energy`      — DRAMPower-style DRAM + McPAT-style CPU
+  energy accounting.
+- :mod:`repro.memsim.system`      — end-to-end system simulation entry
+  points used by the Voltron/MemDVFS evaluations (Figs. 12-19).
+"""

@@ -1,0 +1,100 @@
+"""Energy models: DRAMPower-style DRAM + McPAT-style CPU (Section 6.1).
+
+DRAM power splits into the array domain (scales with V_array^2: activation,
+restoration, precharge, refresh, array static) and the peripheral domain
+(control logic, DLL, I/O: scales with V_peri^2 and channel frequency).
+Voltron reduces only V_array; MemDVFS reduces both V (one rail) and f.
+
+CPU energy = static power x time + dynamic energy per instruction — so CPU
+*energy* grows sub-linearly with runtime loss, matching Fig. 15's observed
++1.7% CPU energy at 2.9% performance loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro import hw
+
+V_NOM = hw.VDD_NOMINAL
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyConstants:
+    # ---- DRAM (per 2-channel DDR3L-1600 system; nJ and W at nominal V) ----
+    e_act_pre_nj: float = 30.0       # ACT+PRE pair energy (array domain)
+    e_rw_array_nj: float = 5.0       # per 64B line, array portion
+    e_rw_periph_nj: float = 10.0     # per 64B line, periph+I/O portion
+    p_bg_array_w: float = 0.33       # background+refresh, array domain
+    p_bg_periph_w: float = 0.60      # background (DLL, clocking), periph
+    # ---- CPU (4x Cortex-A9-class @2 GHz) ---------------------------------
+    p_core_static_w: float = 0.55
+    e_per_inst_nj: float = 0.32
+
+
+CONST = EnergyConstants()
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerBreakdown:
+    dram_dynamic_w: float
+    dram_static_w: float
+    cpu_w: float
+
+    @property
+    def dram_w(self) -> float:
+        return self.dram_dynamic_w + self.dram_static_w
+
+    @property
+    def system_w(self) -> float:
+        return self.dram_w + self.cpu_w
+
+
+def dram_power(v_array: float, v_periph: float, freq_ratio: float,
+               acts_per_ns: float, lines_per_ns: float,
+               c: EnergyConstants = CONST) -> tuple:
+    """(dynamic W, static W) for the DRAM subsystem.
+
+    ``freq_ratio``: channel frequency relative to 1600 MT/s (MemDVFS lowers
+    it; Voltron keeps it at 1.0).  Power ~ V^2 * f for the periph domain and
+    ~ V_array^2 for the asynchronous array operations (Section 2.3).
+    """
+    sa = (v_array / V_NOM) ** 2
+    sp = (v_periph / V_NOM) ** 2
+    dyn = (acts_per_ns * c.e_act_pre_nj * sa
+           + lines_per_ns * (c.e_rw_array_nj * sa + c.e_rw_periph_nj * sp))
+    static = c.p_bg_array_w * sa + c.p_bg_periph_w * sp * (0.35 + 0.65 * freq_ratio)
+    return float(dyn), float(static)
+
+
+def cpu_power(total_ipc: float, c: EnergyConstants = CONST,
+              n_cores: int = 4) -> float:
+    inst_per_s = total_ipc * 2.0e9            # 2 GHz
+    return n_cores * c.p_core_static_w + inst_per_s * c.e_per_inst_nj * 1e-9
+
+
+def system_power(v_array: float, v_periph: float, freq_ratio: float,
+                 acts_per_ns: float, lines_per_ns: float, total_ipc: float,
+                 c: EnergyConstants = CONST) -> PowerBreakdown:
+    dyn, stat = dram_power(v_array, v_periph, freq_ratio, acts_per_ns,
+                           lines_per_ns, c)
+    return PowerBreakdown(dyn, stat, cpu_power(total_ipc, c))
+
+
+def system_energy(v_array: float, v_periph: float, freq_ratio: float,
+                  acts_per_ns: float, lines_per_ns: float,
+                  total_ipc: float, runtime_s: float,
+                  c: EnergyConstants = CONST) -> dict:
+    """Energy (J) to run for ``runtime_s`` executing a fixed instruction
+    stream: CPU dynamic energy follows the instruction count, CPU static
+    and DRAM power follow wall time."""
+    dyn, stat = dram_power(v_array, v_periph, freq_ratio, acts_per_ns,
+                           lines_per_ns, c)
+    n_inst = total_ipc * 2.0e9 * runtime_s
+    cpu_static_j = 4 * c.p_core_static_w * runtime_s
+    cpu_dyn_j = n_inst * c.e_per_inst_nj * 1e-9
+    dram_j = (dyn + stat) * runtime_s
+    return {"cpu": cpu_static_j + cpu_dyn_j,
+            "dram_dynamic": dyn * runtime_s, "dram_static": stat * runtime_s,
+            "dram": dram_j, "system": cpu_static_j + cpu_dyn_j + dram_j}

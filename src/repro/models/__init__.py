@@ -1,0 +1,8 @@
+"""Model zoo: the 10 assigned architectures as composable JAX modules.
+
+Pure-functional style: parameters are nested dicts of jnp arrays; every
+module is ``f(params, inputs, cfg) -> outputs``.  Sharding is attached
+externally by :mod:`repro.parallel.sharding` (logical-axis rules over the
+parameter tree), so the same model code runs on 1 CPU device (smoke tests)
+and on the 512-chip production mesh (dry-run).
+"""

@@ -1,0 +1,295 @@
+"""GQA attention: full-sequence (train/prefill) and decode-step paths.
+
+Variants covered (per the assigned architectures): grouped-query heads,
+RoPE, per-head qk RMSNorm (qwen3/gemma3/olmoe), sliding-window local layers
+(gemma2/3), attention logit softcapping (gemma2), cross-attention
+(seamless).
+
+Decode uses a KV cache per layer:
+- global layers: full-length cache [B, S_max, kv, hd]; the cache sequence
+  axis is sharded over the ``model`` mesh axis for decode shapes
+  (sequence-TP flash-decode: partial scores are combined by GSPMD-inserted
+  collectives; see parallel/sharding.py).
+- local (sliding-window) layers: a ring buffer of ``window`` positions, so
+  a 500k-token context costs O(window) memory on local layers.
+
+The full-sequence path can run through the Pallas flash-attention kernel
+(``impl='pallas'``) or the jnp reference (default on CPU / under GSPMD).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10_000.0
+    qk_norm: bool = False
+    softcap: Optional[float] = None
+    window: Optional[int] = None      # None -> global
+    causal: bool = True               # False for encoder self-attn / cross
+
+
+def init_attn(key, d_model: int, spec: AttnSpec, dtype):
+    """Projection weights are stored head-factored ([D, H, hd] etc.) so the
+    sharding layer can choose head-TP or head-dim-TP without reshapes."""
+    ks = jax.random.split(key, 6)
+    h, kv, hd = spec.n_heads, spec.n_kv_heads, spec.head_dim
+    p = {
+        "wq": common.dense_init(ks[0], (d_model, h, hd), 0, dtype),
+        "wk": common.dense_init(ks[1], (d_model, kv, hd), 0, dtype),
+        "wv": common.dense_init(ks[2], (d_model, kv, hd), 0, dtype),
+        "wo": common.dense_init(ks[3], (h, hd, d_model), 1, dtype),
+    }
+    if spec.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def proj_q(p, x):
+    return jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+
+
+def proj_k(p, x):
+    return jnp.einsum("bsd,dke->bske", x, p["wk"])
+
+
+def proj_v(p, x):
+    return jnp.einsum("bsd,dke->bske", x, p["wv"])
+
+
+def proj_o(p, attn_out):
+    return jnp.einsum("bshe,hed->bsd", attn_out, p["wo"])
+
+
+def _project_qkv(p, x, spec: AttnSpec, positions):
+    q, k, v = proj_q(p, x), proj_k(p, x), proj_v(p, x)
+    if spec.qk_norm:
+        q = common.rmsnorm(q, p["q_norm"])
+        k = common.rmsnorm(k, p["k_norm"])
+    if positions is not None:
+        q = common.apply_rope(q, positions, spec.rope_theta)
+        k = common.apply_rope(k, positions, spec.rope_theta)
+    return q, k, v
+
+
+def _mask(spec: AttnSpec, q_pos, k_pos):
+    """[..., S_q, S_k] additive mask from causality + sliding window."""
+    m = jnp.zeros((q_pos.shape[-1], k_pos.shape[-1]), jnp.float32)
+    d = q_pos[..., :, None] - k_pos[..., None, :]
+    if spec.causal:
+        m = jnp.where(d < 0, -jnp.inf, m)
+    if spec.window is not None:
+        m = jnp.where(d >= spec.window, -jnp.inf, m)
+    return m
+
+
+def mha(p, x, spec: AttnSpec, positions=None, kv_x=None, kv_positions=None,
+        impl: str = "reference"):
+    """Full-sequence attention.  ``kv_x`` enables cross-attention."""
+    b, s, _ = x.shape
+    h, kv, hd = spec.n_heads, spec.n_kv_heads, spec.head_dim
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    # cross-attention uses no RoPE (positions=None disables it)
+    q, k, v = _project_qkv(p, x, spec,
+                           None if kv_x is not None else positions)
+    if kv_x is not None:
+        sk = kv_x.shape[1]
+        k, v = proj_k(p, kv_x), proj_v(p, kv_x)
+        if spec.qk_norm:
+            k = common.rmsnorm(k, p["k_norm"])
+        k_pos = (kv_positions if kv_positions is not None
+                 else jnp.arange(sk)[None, :])
+    else:
+        k_pos = positions
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(q, k, v, causal=spec.causal,
+                                     window=spec.window,
+                                     softcap=spec.softcap)
+    elif s > CHUNK_THRESHOLD:
+        out = attention_chunked(q, k, v, spec, positions, k_pos)
+    else:
+        out = attention_ref(q, k, v, spec, positions, k_pos)
+    return proj_o(p, out)
+
+
+# Above this many query positions, attention runs chunked over queries so
+# the score matrix never materializes at [S, S] (bounds live memory to
+# [Q_CHUNK, S] per head — the jnp analogue of flash attention's tiling).
+CHUNK_THRESHOLD = 2048
+Q_CHUNK = 512
+
+
+def _scores_block(qg, k, spec, q_pos, k_pos):
+    """qg: [B, Sq, KV, G, hd]; k: [B, Sk, KV, hd] -> [B,KV,G,Sq,Sk] f32."""
+    hd = qg.shape[-1]
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / (hd ** 0.5)
+    scores = common.softcap(scores, spec.softcap)
+    m = _mask(spec, q_pos, k_pos)
+    return scores + m[None, None, None]
+
+
+def attention_ref(q, k, v, spec: AttnSpec, q_pos, k_pos):
+    """jnp oracle: grouped-query attention with mask + softcap."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    groups = h // kv
+    qg = q.reshape(b, s, kv, groups, hd)
+    scores = _scores_block(qg, k, spec,
+                           q_pos[0] if q_pos.ndim > 1 else q_pos,
+                           k_pos[0] if k_pos.ndim > 1 else k_pos)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(b, s, h, hd)
+
+
+def attention_chunked(q, k, v, spec: AttnSpec, q_pos, k_pos,
+                      q_chunk: int = Q_CHUNK):
+    """Query-chunked exact attention (scan over query blocks).
+
+    Under the "seq" sharding policy each chunk's query-position axis is
+    sharded over the ``model`` mesh axis (sequence-parallel attention):
+    every TP rank computes all heads for a slice of queries against the
+    gathered K/V — balanced for any head count, with only linear-size
+    boundary collectives (the fix for the quadratic score all-reduce that
+    head_dim-contraction sharding would cause).
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.parallel import sharding as shctx
+
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    groups = h // kv
+    assert s % q_chunk == 0, f"seq {s} % q_chunk {q_chunk} != 0"
+    nq = s // q_chunk
+    qg = q.reshape(b, nq, q_chunk, kv, groups, hd)
+    qp = (q_pos[0] if q_pos.ndim > 1 else q_pos).reshape(nq, q_chunk)
+    kp = k_pos[0] if k_pos.ndim > 1 else k_pos
+
+    pol = shctx.active_policy()
+    seq_mode = pol is not None and pol.attn_mode == "seq"
+    dp = shctx.active_dp_axes()
+    if seq_mode:
+        k = shctx.constrain(k, P(dp, None, None, None))
+        v = shctx.constrain(v, P(dp, None, None, None))
+
+    def one_chunk(carry, inp):
+        qc, qpc = inp                              # [B,C,KV,G,hd], [C]
+        if seq_mode:
+            qc = shctx.constrain(qc, P(dp, "model", None, None, None))
+        scores = _scores_block(qc, k, spec, qpc, kp)
+        w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+        if seq_mode:
+            out = shctx.constrain(out, P(dp, "model", None, None, None))
+        return carry, out
+
+    _, outs = jax.lax.scan(one_chunk, None,
+                           (jnp.moveaxis(qg, 1, 0), qp))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, kv, groups, hd)
+    return out.reshape(b, s, h, hd)
+
+
+# --------------------------------------------------------------------------
+# KV cache + decode
+# --------------------------------------------------------------------------
+def init_cache(batch: int, max_len: int, spec: AttnSpec, dtype,
+               window_ring: bool = True):
+    """Cache arrays for one layer.  Local layers use a ring buffer."""
+    length = max_len
+    if spec.window is not None and window_ring:
+        length = min(max_len, spec.window)
+    return {
+        "k": jnp.zeros((batch, length, spec.n_kv_heads, spec.head_dim), dtype),
+        "v": jnp.zeros((batch, length, spec.n_kv_heads, spec.head_dim), dtype),
+    }
+
+
+def cache_spec_like(batch, max_len, spec: AttnSpec, dtype):
+    c = init_cache(batch, max_len, spec, dtype)
+    return jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), c)
+
+
+def decode_step(p, x, cache, pos, spec: AttnSpec):
+    """One-token decode: update cache at ``pos``, attend over it.
+
+    x: [B, 1, D]; pos: scalar int32 (same position for the whole batch);
+    returns (out [B, 1, D], new_cache).
+    """
+    b = x.shape[0]
+    h, kv, hd = spec.n_heads, spec.n_kv_heads, spec.head_dim
+    q, k, v = proj_q(p, x), proj_k(p, x), proj_v(p, x)
+    if spec.qk_norm:
+        q = common.rmsnorm(q, p["q_norm"])
+        k = common.rmsnorm(k, p["k_norm"])
+    positions = jnp.full((b, 1), pos)
+    q = common.apply_rope(q, positions, spec.rope_theta)
+    k = common.apply_rope(k, positions, spec.rope_theta)
+
+    length = cache["k"].shape[1]
+    slot = pos % length if spec.window is not None else pos
+    store_dt = cache["k"].dtype
+    # int8 caches: structural quantization (production adds per-head scales;
+    # the dry-run measures layout/traffic, tests pin bf16 numerics)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"],
+                                             k.astype(store_dt), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"],
+                                             v.astype(store_dt), slot, axis=1)
+
+    # positions held in each cache slot (ring-aware), for mask + validity
+    idx = jnp.arange(length)
+    if spec.window is not None:
+        # slot i holds the latest position p <= pos with p % length == i
+        cand = (pos // length) * length + idx
+        slot_pos = jnp.where(cand > pos, cand - length, cand)
+        valid = (slot_pos >= 0) & (slot_pos > pos - spec.window)
+    else:
+        slot_pos = idx
+        valid = idx <= pos
+
+    groups = h // kv
+    qg = q.reshape(b, kv, groups, hd)
+    ckc, cvc = ck.astype(q.dtype), cv.astype(q.dtype)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, ckc).astype(jnp.float32)
+    scores = scores / (hd ** 0.5)
+    scores = common.softcap(scores, spec.softcap)
+    scores = jnp.where(valid[None, None, None, :], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1).astype(cvc.dtype)
+    out = jnp.einsum("bkgt,btkd->bkgd", w, cvc).reshape(b, 1, h, hd)
+    return proj_o(p, out), {"k": ck, "v": cv}
+
+
+def prefill_cache(p, x, spec: AttnSpec, max_len: int, positions=None):
+    """Run the projections over a full prompt and lay out the cache."""
+    b, s, _ = x.shape
+    kv, hd = spec.n_kv_heads, spec.head_dim
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    k, v = proj_k(p, x), proj_v(p, x)
+    if spec.qk_norm:
+        k = common.rmsnorm(k, p["k_norm"])
+    k = common.apply_rope(k, positions, spec.rope_theta)
+    cache = init_cache(b, max_len, spec, x.dtype)
+    length = cache["k"].shape[1]
+    if length >= s:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=1)
+    else:  # ring: keep the last ``length`` positions, ring-aligned
+        tail_k, tail_v = k[:, -length:], v[:, -length:]
+        shift = s % length
+        ck = jnp.roll(tail_k, shift, axis=1)
+        cv = jnp.roll(tail_v, shift, axis=1)
+    return {"k": ck, "v": cv}

@@ -1,0 +1,502 @@
+"""Model assembly for all assigned architectures.
+
+One parameter tree + three entry points per architecture:
+
+- ``forward``      full-sequence logits (training / prefill compute)
+- ``loss_fn``      next-token cross-entropy (train_step lowers this)
+- ``prefill``      full-prompt pass that also lays out the KV/SSM caches
+- ``decode_step``  one-token serve step over the caches
+
+Layer kinds come from ``cfg.layer_pattern``: G(lobal attention), L(ocal
+sliding-window attention), M(amba2 SSD), S(hared attention block — zamba2).
+Encoder-decoder (seamless) adds an encoder stack + cross-attention; VLM
+(pixtral) and audio (seamless) frontends are stubs fed with precomputed
+embeddings via ``input_specs`` per the assignment brief.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, common, mlp, moe, ssm
+from repro.models.attention import AttnSpec
+
+
+# --------------------------------------------------------------------------
+# specs
+# --------------------------------------------------------------------------
+def attn_spec(cfg: ModelConfig, kind: str, causal: bool = True) -> AttnSpec:
+    return AttnSpec(
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+        softcap=cfg.attn_softcap,
+        window=cfg.window if kind == "L" else None, causal=causal)
+
+
+def _layer_kinds(cfg: ModelConfig) -> list:
+    return [cfg.layer_kind(i) for i in range(cfg.n_layers)]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def init_params(key, cfg: ModelConfig):
+    dt = common.dtype_of(cfg)
+    keys = iter(jax.random.split(key, 4 * cfg.n_layers + 4 * max(cfg.n_enc_layers, 1) + 16))
+    p = {"embed": common.embed_init(next(keys), (cfg.vocab, cfg.d_model), dt)}
+
+    def dense_layer(kind: str, with_cross: bool = False):
+        lp = {"ln1": jnp.ones((cfg.d_model,), dt)}
+        lp["attn"] = attention.init_attn(next(keys), cfg.d_model,
+                                         attn_spec(cfg, kind), dt)
+        lp["ln2"] = jnp.ones((cfg.d_model,), dt)
+        if cfg.family == "moe":
+            lp["moe"] = moe.init_moe(next(keys), cfg.d_model, cfg.d_ff,
+                                     cfg.n_experts, dt)
+        else:
+            lp["mlp"] = mlp.init_mlp(next(keys), cfg.d_model, cfg.d_ff, dt)
+        if cfg.post_norms:
+            lp["ln1_post"] = jnp.ones((cfg.d_model,), dt)
+            lp["ln2_post"] = jnp.ones((cfg.d_model,), dt)
+        if with_cross:
+            lp["ln_cross"] = jnp.ones((cfg.d_model,), dt)
+            lp["cross"] = attention.init_attn(
+                next(keys), cfg.d_model, attn_spec(cfg, "G", causal=False), dt)
+        return lp
+
+    def mamba_layer():
+        return {"ln1": jnp.ones((cfg.d_model,), dt),
+                "mamba": ssm.init_mamba2(next(keys), cfg, dt)}
+
+    layers = []
+    for kind in _layer_kinds(cfg):
+        if kind == "M":
+            layers.append(mamba_layer())
+        elif kind == "S":
+            layers.append({"ln1": jnp.ones((cfg.d_model,), dt)})  # shared wts
+        else:
+            layers.append(dense_layer(kind,
+                                      with_cross=cfg.family == "encdec"))
+    p["layers"] = layers
+
+    if "S" in cfg.layer_pattern:           # zamba2 shared block
+        p["shared"] = {
+            "ln1": jnp.ones((cfg.d_model,), dt),
+            "attn": attention.init_attn(next(keys), cfg.d_model,
+                                        attn_spec(cfg, "G"), dt),
+            "ln2": jnp.ones((cfg.d_model,), dt),
+            "mlp": mlp.init_mlp(next(keys), cfg.d_model, cfg.shared_d_ff, dt),
+        }
+    if cfg.family == "encdec":
+        p["enc_layers"] = [
+            {"ln1": jnp.ones((cfg.d_model,), dt),
+             "attn": attention.init_attn(next(keys), cfg.d_model,
+                                         attn_spec(cfg, "G", causal=False), dt),
+             "ln2": jnp.ones((cfg.d_model,), dt),
+             "mlp": mlp.init_mlp(next(keys), cfg.d_model, cfg.d_ff, dt)}
+            for _ in range(cfg.n_enc_layers)]
+        p["enc_norm"] = jnp.ones((cfg.d_model,), dt)
+    p["final_norm"] = jnp.ones((cfg.d_model,), dt)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = common.dense_init(next(keys), (cfg.d_model, cfg.vocab),
+                                         0, dt)
+    return p
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct parameter tree (dry-run: no allocation)."""
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.key(0))
+
+
+# --------------------------------------------------------------------------
+# layer application
+# --------------------------------------------------------------------------
+def _apply_norm(h, w, cfg):
+    return common.rmsnorm(h, w, plus_one=cfg.norm_plus_one)
+
+
+def _attn_block(lp, h, cfg, kind, positions, impl, enc_out=None):
+    spec = attn_spec(cfg, kind)
+    a = attention.mha(lp["attn"], _apply_norm(h, lp["ln1"], cfg), spec,
+                      positions, impl=impl)
+    if cfg.post_norms:
+        a = _apply_norm(a, lp["ln1_post"], cfg)
+    h = h + a
+    if enc_out is not None:                      # cross-attention (encdec)
+        c = attention.mha(lp["cross"], _apply_norm(h, lp["ln_cross"], cfg),
+                          attn_spec(cfg, "G", causal=False), positions,
+                          kv_x=enc_out, impl=impl)
+        h = h + c
+    x = _apply_norm(h, lp["ln2"], cfg)
+    m = moe.moe(lp["moe"], x, cfg) if cfg.family == "moe" \
+        else mlp.mlp(lp["mlp"], x, cfg.act)
+    if cfg.post_norms:
+        m = _apply_norm(m, lp["ln2_post"], cfg)
+    return h + m
+
+
+def _mamba_block(lp, h, cfg, impl):
+    return h + ssm.mamba2_block(lp["mamba"],
+                                _apply_norm(h, lp["ln1"], cfg), cfg,
+                                impl=impl)
+
+
+def _shared_block(sp, lp, h, cfg, positions, impl):
+    a = attention.mha(sp["attn"], _apply_norm(h, lp["ln1"], cfg),
+                      attn_spec(cfg, "G"), positions, impl=impl)
+    h = h + a
+    m = mlp.mlp(sp["mlp"], _apply_norm(h, sp["ln2"], cfg), cfg.act)
+    return h + m
+
+
+# --------------------------------------------------------------------------
+# full-sequence forward
+# --------------------------------------------------------------------------
+def embed_tokens(params, tokens, cfg: ModelConfig,
+                 frontend_embeds=None):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    if frontend_embeds is not None and cfg.family == "vlm":
+        h = jnp.concatenate([frontend_embeds.astype(h.dtype), h], axis=1)
+    return h
+
+
+def encode(params, frame_embeds, cfg: ModelConfig, impl="reference"):
+    """Encoder stack over precomputed (stub) frontend embeddings."""
+    h = frame_embeds.astype(common.dtype_of(cfg))
+    pos = jnp.arange(h.shape[1])[None, :]
+    spec = attn_spec(cfg, "G", causal=False)
+
+    def enc_layer(lp, h):
+        h = h + attention.mha(lp["attn"], _apply_norm(h, lp["ln1"], cfg),
+                              spec, pos, impl=impl)
+        return h + mlp.mlp(lp["mlp"], _apply_norm(h, lp["ln2"], cfg), cfg.act)
+
+    if cfg.scan_blocks and cfg.n_enc_layers >= 2:
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                               *params["enc_layers"])
+        body = lambda h, lp: (enc_layer(lp, h), None)
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        h, _ = jax.lax.scan(body, h, stacked)
+    else:
+        for lp in params["enc_layers"]:
+            h = enc_layer(lp, h)
+    return _apply_norm(h, params["enc_norm"], cfg)
+
+
+def _stack_period(layers_list, period: int, n_full: int):
+    """Group per-layer param trees by position-in-period, stacked over the
+    repeating blocks (for lax.scan), plus the unrolled remainder layers."""
+    stacked = []
+    for i in range(period):
+        group = [layers_list[b * period + i] for b in range(n_full)]
+        stacked.append(jax.tree.map(lambda *xs: jnp.stack(xs), *group))
+    return tuple(stacked), layers_list[n_full * period:]
+
+
+def forward(params, tokens, cfg: ModelConfig, *, frontend_embeds=None,
+            impl: str = "reference", remat: Optional[bool] = None):
+    """Logits over the full sequence.  [B, S] -> [B, S(+P), V]."""
+    remat = cfg.remat if remat is None else remat
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = encode(params, frontend_embeds, cfg, impl)
+    h = embed_tokens(params, tokens, cfg, frontend_embeds)
+    positions = jnp.arange(h.shape[1])[None, :]
+
+    def run_layer(lp, h, kind):
+        if kind == "M":
+            return _mamba_block(lp, h, cfg, impl)
+        if kind == "S":
+            return _shared_block(params["shared"], lp, h, cfg, positions, impl)
+        return _attn_block(lp, h, cfg, kind, positions, impl, enc_out)
+
+    kinds = _layer_kinds(cfg)
+    period, n_full = cfg.pattern_period, cfg.full_blocks
+    if cfg.scan_blocks and n_full >= 2:
+        stacked, rem = _stack_period(params["layers"], period, n_full)
+
+        def block_fn(h, block_params):
+            for i in range(period):
+                h = run_layer(block_params[i], h, kinds[i])
+            return h, None
+
+        if remat:
+            block_fn = jax.checkpoint(block_fn)
+        h, _ = jax.lax.scan(block_fn, h, stacked)
+        for j, lp in enumerate(rem):
+            fn = functools.partial(run_layer, kind=kinds[n_full * period + j])
+            if remat:
+                fn = jax.checkpoint(fn)
+            h = fn(lp, h)
+    else:
+        for lp, kind in zip(params["layers"], kinds):
+            fn = functools.partial(run_layer, kind=kind)
+            if remat:
+                fn = jax.checkpoint(fn)
+            h = fn(lp, h)
+    h = _apply_norm(h, params["final_norm"], cfg)
+    logits = unembed(params, h, cfg)
+    return logits
+
+
+def unembed(params, h, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"].T
+    else:
+        logits = h @ params["lm_head"]
+    return common.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, impl: str = "reference"):
+    """Next-token cross-entropy.  batch: {tokens, labels, [frontend]}."""
+    logits = forward(params, batch["tokens"], cfg,
+                     frontend_embeds=batch.get("frontend"), impl=impl)
+    labels = batch["labels"]
+    if cfg.family == "vlm" and cfg.frontend_tokens > 0:
+        logits = logits[:, cfg.frontend_tokens:]     # loss on text positions
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    take = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return -(take * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# --------------------------------------------------------------------------
+# caches: prefill + decode
+# --------------------------------------------------------------------------
+def init_caches(batch: int, max_len: int, cfg: ModelConfig, enc_len: int = 0):
+    dt = common.dtype_of(cfg)
+    caches = []
+    for kind in _layer_kinds(cfg):
+        if kind == "M":
+            caches.append(ssm.init_ssm_cache(batch, cfg, dt))
+        else:
+            caches.append(attention.init_cache(
+                batch, max_len, attn_spec(cfg, kind), dt))
+    if cfg.family == "encdec":
+        # each decoder layer carries its own precomputed cross K/V
+        spec = attn_spec(cfg, "G", causal=False)
+        for c in caches:
+            cross = attention.init_cache(batch, enc_len, spec, dt,
+                                         window_ring=False)
+            c["cross_k"], c["cross_v"] = cross["k"], cross["v"]
+    return {"layers": caches, "pos": jnp.zeros((), jnp.int32)}
+
+
+def abstract_caches(batch: int, max_len: int, cfg: ModelConfig,
+                    enc_len: int = 0):
+    return jax.eval_shape(
+        lambda: init_caches(batch, max_len, cfg, enc_len))
+
+
+def _decode_layer(lp, kind, h, cache, pos, params, cfg):
+    """One layer of single-token decode: returns (h, new_cache)."""
+    if kind == "M":
+        out, cache = ssm.mamba2_step(lp["mamba"],
+                                     _apply_norm(h, lp["ln1"], cfg), cache,
+                                     cfg)
+        return h + out, cache
+    if kind == "S":
+        sp = params["shared"]
+        out, cache = attention.decode_step(
+            sp["attn"], _apply_norm(h, lp["ln1"], cfg), cache, pos,
+            attn_spec(cfg, "G"))
+        h = h + out
+        h = h + mlp.mlp(sp["mlp"], _apply_norm(h, sp["ln2"], cfg), cfg.act)
+        return h, cache
+    spec = attn_spec(cfg, kind)
+    self_cache = {"k": cache["k"], "v": cache["v"]}
+    out, self_cache = attention.decode_step(
+        lp["attn"], _apply_norm(h, lp["ln1"], cfg), self_cache, pos, spec)
+    new_c = dict(cache)
+    new_c.update(self_cache)
+    cache = new_c
+    if cfg.post_norms:
+        out = _apply_norm(out, lp["ln1_post"], cfg)
+    h = h + out
+    if cfg.family == "encdec":
+        ck = {"k": cache["cross_k"], "v": cache["cross_v"]}
+        q = _apply_norm(h, lp["ln_cross"], cfg)
+        h = h + _cross_decode(lp["cross"], q, ck, cfg)
+    x = _apply_norm(h, lp["ln2"], cfg)
+    m = moe.moe(lp["moe"], x, cfg) if cfg.family == "moe" \
+        else mlp.mlp(lp["mlp"], x, cfg.act)
+    if cfg.post_norms:
+        m = _apply_norm(m, lp["ln2_post"], cfg)
+    return h + m, cache
+
+
+def decode_step(params, token, caches, cfg: ModelConfig, *,
+                enc_out=None, impl: str = "reference"):
+    """One-token serve step.
+
+    token: [B, 1] int32; caches as from ``init_caches``/``prefill``.
+    Returns (logits [B, 1, V], new_caches)."""
+    pos = caches["pos"]
+    h = jnp.take(params["embed"], token, axis=0)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+
+    kinds = _layer_kinds(cfg)
+    period, n_full = cfg.pattern_period, cfg.full_blocks
+    if cfg.scan_blocks and n_full >= 2:
+        p_stk, p_rem = _stack_period(params["layers"], period, n_full)
+        c_stk, c_rem = _stack_period(caches["layers"], period, n_full)
+
+        def block_fn(h, xs):
+            block_params, block_caches = xs
+            new_block = []
+            for i in range(period):
+                h, c = _decode_layer(block_params[i], kinds[i], h,
+                                     block_caches[i], pos, params, cfg)
+                new_block.append(c)
+            return h, tuple(new_block)
+
+        h, new_stk = jax.lax.scan(block_fn, h, (p_stk, c_stk))
+        new_layer_caches = []
+        for b in range(n_full):
+            for i in range(period):
+                new_layer_caches.append(
+                    jax.tree.map(lambda x: x[b], new_stk[i]))
+        for j, (lp, cache) in enumerate(zip(p_rem, c_rem)):
+            h, c = _decode_layer(lp, kinds[n_full * period + j], h, cache,
+                                 pos, params, cfg)
+            new_layer_caches.append(c)
+    else:
+        new_layer_caches = []
+        for lp, kind, cache in zip(params["layers"], kinds, caches["layers"]):
+            h, cache = _decode_layer(lp, kind, h, cache, pos, params, cfg)
+            new_layer_caches.append(cache)
+    h = _apply_norm(h, params["final_norm"], cfg)
+    logits = unembed(params, h, cfg)
+    new = dict(caches)
+    new["layers"] = new_layer_caches
+    new["pos"] = pos + 1
+    return logits, new
+
+
+def _cross_decode(p, q_in, cross_kv, cfg):
+    """Single-token cross-attention over the precomputed encoder K/V.
+    No RoPE on cross-attention (matches the full-sequence path)."""
+    b = q_in.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = attention.proj_q(p, q_in)
+    if cfg.qk_norm:
+        q = common.rmsnorm(q, p["q_norm"])
+    groups = h // kv
+    qg = q.reshape(b, kv, groups, hd)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg,
+                        cross_kv["k"]).astype(jnp.float32) / (hd ** 0.5)
+    w = jax.nn.softmax(scores, axis=-1).astype(cross_kv["v"].dtype)
+    out = jnp.einsum("bkgt,btkd->bkgd", w, cross_kv["v"]).reshape(b, 1, h, hd)
+    return attention.proj_o(p, out)
+
+
+def _prefill_layer(lp, kind, h, cfg, max_len, positions, enc_out, params,
+                   impl):
+    """One layer of prompt prefill: returns (h, laid-out cache)."""
+    if kind == "M":
+        pre = _apply_norm(h, lp["ln1"], cfg)
+        out, cache = _mamba_prefill(lp["mamba"], pre, cfg)
+        return h + out, cache
+    if kind == "S":
+        sp = params["shared"]
+        pre = _apply_norm(h, lp["ln1"], cfg)
+        spec = attn_spec(cfg, "G")
+        cache = attention.prefill_cache(sp["attn"], pre, spec, max_len,
+                                        positions)
+        h = h + attention.mha(sp["attn"], pre, spec, positions, impl=impl)
+        h = h + mlp.mlp(sp["mlp"], _apply_norm(h, sp["ln2"], cfg), cfg.act)
+        return h, cache
+    spec = attn_spec(cfg, kind)
+    pre = _apply_norm(h, lp["ln1"], cfg)
+    cache = attention.prefill_cache(lp["attn"], pre, spec, max_len, positions)
+    a = attention.mha(lp["attn"], pre, spec, positions, impl=impl)
+    if cfg.post_norms:
+        a = _apply_norm(a, lp["ln1_post"], cfg)
+    h = h + a
+    if cfg.family == "encdec":
+        c = attention.mha(lp["cross"], _apply_norm(h, lp["ln_cross"], cfg),
+                          attn_spec(cfg, "G", causal=False), positions,
+                          kv_x=enc_out, impl=impl)
+        h = h + c
+        cache["cross_k"] = attention.proj_k(lp["cross"], enc_out)
+        cache["cross_v"] = attention.proj_v(lp["cross"], enc_out)
+    x = _apply_norm(h, lp["ln2"], cfg)
+    m = moe.moe(lp["moe"], x, cfg) if cfg.family == "moe" \
+        else mlp.mlp(lp["mlp"], x, cfg.act)
+    if cfg.post_norms:
+        m = _apply_norm(m, lp["ln2_post"], cfg)
+    return h + m, cache
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len: int, *,
+            frontend_embeds=None, impl: str = "reference"):
+    """Full-prompt pass: returns (last-token logits, laid-out caches)."""
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = encode(params, frontend_embeds, cfg, impl)
+    h = embed_tokens(params, tokens, cfg, frontend_embeds)
+    b, s = h.shape[0], h.shape[1]
+    positions = jnp.arange(s)[None, :]
+    kinds = _layer_kinds(cfg)
+    period, n_full = cfg.pattern_period, cfg.full_blocks
+    if cfg.scan_blocks and n_full >= 2:
+        p_stk, p_rem = _stack_period(params["layers"], period, n_full)
+
+        def block_fn(h, block_params):
+            block_caches = []
+            for i in range(period):
+                h, c = _prefill_layer(block_params[i], kinds[i], h, cfg,
+                                      max_len, positions, enc_out, params,
+                                      impl)
+                block_caches.append(c)
+            return h, tuple(block_caches)
+
+        if cfg.remat:
+            block_fn = jax.checkpoint(block_fn)
+        h, stk_caches = jax.lax.scan(block_fn, h, p_stk)
+        new_caches = []
+        for bidx in range(n_full):
+            for i in range(period):
+                new_caches.append(
+                    jax.tree.map(lambda x: x[bidx], stk_caches[i]))
+        for j, lp in enumerate(p_rem):
+            h, c = _prefill_layer(lp, kinds[n_full * period + j], h, cfg,
+                                  max_len, positions, enc_out, params, impl)
+            new_caches.append(c)
+    else:
+        new_caches = []
+        for lp, kind in zip(params["layers"], kinds):
+            h, cache = _prefill_layer(lp, kind, h, cfg, max_len, positions,
+                                      enc_out, params, impl)
+            new_caches.append(cache)
+    h = _apply_norm(h, params["final_norm"], cfg)
+    logits = unembed(params, h[:, -1:], cfg)
+    return logits, {"layers": new_caches, "pos": jnp.asarray(s, jnp.int32)}
+
+
+def _mamba_prefill(p, pre, cfg):
+    """Mamba2 over the prompt, returning the final recurrent state."""
+    bsz, s, _ = pre.shape
+    din, n, h, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    z, x_in, bc_in, dt_raw = ssm._project(p, pre, cfg)
+    x_conv, conv_x = ssm._causal_conv(x_in, p["conv_x_w"], p["conv_x_b"])
+    bc_conv, conv_bc = ssm._causal_conv(bc_in, p["conv_bc_w"], p["conv_bc_b"])
+    x = x_conv.reshape(bsz, s, h, pd)
+    b_mat = bc_conv[..., :n]
+    c_mat = bc_conv[..., n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    y, state = ssm.ssd_chunked(x, a, b_mat, c_mat, dt, p["d_skip"],
+                               cfg.ssd_chunk, return_state=True)
+    y = y.reshape(bsz, s, din)
+    y = common.rmsnorm(y * jax.nn.silu(z), p["norm_w"])
+    cache = {"conv_x": conv_x, "conv_bc": conv_bc, "state": state}
+    return y @ p["out_proj"], cache

@@ -1,0 +1,20 @@
+"""Gated MLP (SwiGLU / GeGLU)."""
+from __future__ import annotations
+
+import jax
+
+from repro.models import common
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": common.dense_init(ks[0], (d_model, d_ff), 0, dtype),
+        "w_up": common.dense_init(ks[1], (d_model, d_ff), 0, dtype),
+        "w_down": common.dense_init(ks[2], (d_ff, d_model), 0, dtype),
+    }
+
+
+def mlp(p, x, act: str = "silu"):
+    f = common.act_fn(act)
+    return (f(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]

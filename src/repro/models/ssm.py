@@ -1,0 +1,224 @@
+"""Mamba2 (SSD — state-space duality) blocks.
+
+Layer anatomy (arXiv:2405.21060):
+  in_proj -> [z | x | B | C | dt]; causal depthwise conv over (x,B,C);
+  dt = softplus(dt + dt_bias); y = SSD(x, A, B, C, dt) + D*x;
+  out = out_proj( RMSNorm(y) * silu(z) ).
+
+The SSD core is computed chunk-wise: an intra-chunk attention-like term and
+an inter-chunk state recurrence (lax.scan over chunks).  ``ssd_ref`` is the
+sequential oracle used by tests and by the Pallas kernel's ref.py.
+
+State-TP sharding: SSD heads are sharded over the ``model`` mesh axis (the
+head axis is fully parallel); the recurrent state [B, H, N, P] shards the
+same way for decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+def init_mamba2(key, cfg, dtype):
+    """Projections are stored *unfused* (w_z/w_x/w_b/w_c/w_dt instead of one
+    fused in_proj): same math, but each output is a clean logical axis so
+    tensor-parallelism shards x/z by SSD head while B/C (shared across
+    heads) stay replicated.  The conv weights split the same way."""
+    d, din, h, n = cfg.d_model, cfg.d_inner, cfg.ssm_heads, cfg.ssm_state
+    ks = jax.random.split(key, 9)
+    return {
+        "w_z": common.dense_init(ks[0], (d, din), 0, dtype),
+        "w_x": common.dense_init(ks[1], (d, din), 0, dtype),
+        "w_b": common.dense_init(ks[2], (d, n), 0, dtype),
+        "w_c": common.dense_init(ks[3], (d, n), 0, dtype),
+        "w_dt": common.dense_init(ks[4], (d, h), 0, dtype),
+        "conv_x_w": common.dense_init(ks[5], (din, cfg.conv_width), 1, dtype),
+        "conv_x_b": jnp.zeros((din,), dtype),
+        "conv_bc_w": common.dense_init(ks[6], (2 * n, cfg.conv_width), 1,
+                                       dtype),
+        "conv_bc_b": jnp.zeros((2 * n,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[7], (h,), jnp.float32)
+                    * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3)))),
+        "norm_w": jnp.ones((din,), dtype),
+        "out_proj": common.dense_init(ks[8], (din, d), 0, dtype),
+    }
+
+
+def _project(p, hidden, cfg):
+    """hidden -> (z, x_conv_in [B,S,din], bc_conv_in [B,S,2N], dt_raw)."""
+    z = hidden @ p["w_z"]
+    x = hidden @ p["w_x"]
+    bc = jnp.concatenate([hidden @ p["w_b"], hidden @ p["w_c"]], axis=-1)
+    dt_raw = hidden @ p["w_dt"]
+    return z, x, bc, dt_raw
+
+
+def _causal_conv(xbc, w, b, prev=None):
+    """Depthwise causal conv over the sequence axis.
+
+    xbc: [B, S, C]; w: [C, W]; prev: [B, W-1, C] left context (decode).
+    Returns (out [B, S, C], new_prev [B, W-1, C])."""
+    width = w.shape[1]
+    if prev is None:
+        prev = jnp.zeros(xbc.shape[:1] + (width - 1, xbc.shape[-1]), xbc.dtype)
+    padded = jnp.concatenate([prev, xbc], axis=1)          # [B, W-1+S, C]
+    out = sum(padded[:, i:i + xbc.shape[1], :] * w[None, None, :, i]
+              for i in range(width))
+    out = jax.nn.silu(out + b[None, None, :])
+    new_prev = padded[:, -(width - 1):, :] if width > 1 else prev
+    return out, new_prev
+
+
+def ssd_chunked(x, a, b_mat, c_mat, dt, d_skip, chunk: int,
+                init_state=None, return_state: bool = False):
+    """Chunked SSD.
+
+    x: [B, S, H, P]; a: [H] (negative); b_mat/c_mat: [B, S, N];
+    dt: [B, S, H].  Returns y [B, S, H, P] (+ final state [B, H, N, P]).
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    s_orig = s
+    if s % chunk:
+        # pad with dt=0 steps: decay exp(0)=1 and injection 0 preserve the
+        # carried state exactly; padded outputs are sliced away below
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+    xr = x.reshape(bsz, nc, chunk, h, p).astype(jnp.float32)
+    br = b_mat.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+    cr = c_mat.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+    dtr = dt.reshape(bsz, nc, chunk, h).astype(jnp.float32)
+
+    log_dec = dtr * a[None, None, None, :]                 # [B,nc,L,H] (<=0)
+    cum = jnp.cumsum(log_dec, axis=2)                      # inclusive
+    dtx = xr * dtr[..., None]                              # [B,nc,L,H,P]
+
+    # intra-chunk (masked attention-like) term
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # [B,nc,Li,Lj,H]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(rel), 0.0)
+    cb = jnp.einsum("bgin,bgjn->bgij", cr, br)             # [B,nc,Li,Lj]
+    y_intra = jnp.einsum("bgij,bgijh,bgjhp->bgihp", cb, decay, dtx)
+
+    # per-chunk input to the carried state
+    dec_to_end = jnp.exp(cum[:, :, -1:, :] - cum)          # [B,nc,L,H]
+    chunk_state = jnp.einsum("bgjn,bgjh,bgjhp->bghnp", br, dec_to_end, dtx)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # [B,nc,H]
+
+    def scan_fn(carry, inp):
+        cs, cd = inp                                       # [B,H,N,P],[B,H]
+        new = carry * cd[..., None, None] + cs
+        return new, carry                                  # emit state *in*
+
+    init = (jnp.zeros((bsz, h, n, p), jnp.float32) if init_state is None
+            else init_state.astype(jnp.float32))
+    final, states_in = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    states_in = jnp.moveaxis(states_in, 0, 1)              # [B,nc,H,N,P]
+
+    y_inter = jnp.einsum("bgin,bgih,bghnp->bgihp", cr, jnp.exp(cum),
+                         states_in)
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    y = y + x.astype(jnp.float32) * d_skip[None, None, :, None]
+    y = y[:, :s_orig].astype(x.dtype)
+    return (y, final) if return_state else y
+
+
+def ssd_ref(x, a, b_mat, c_mat, dt, d_skip, init_state=None):
+    """Sequential oracle: the plain SSM recurrence."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    state = (jnp.zeros((bsz, h, n, p), jnp.float32) if init_state is None
+             else init_state.astype(jnp.float32))
+
+    def step(state, inp):
+        xt, bt, ct, dtt = inp                      # [B,H,P],[B,N],[B,N],[B,H]
+        decay = jnp.exp(dtt * a[None, :])          # [B,H]
+        inject = jnp.einsum("bn,bhp->bhnp", bt, xt * dtt[..., None])
+        state = state * decay[..., None, None] + inject
+        y = jnp.einsum("bn,bhnp->bhp", ct, state)
+        return state, y
+
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(b_mat.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(c_mat.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0))
+    state, ys = jax.lax.scan(step, state, xs)
+    y = jnp.moveaxis(ys, 0, 1)
+    y = y + x.astype(jnp.float32) * d_skip[None, None, :, None]
+    return y.astype(x.dtype), state
+
+
+def mamba2_block(p, hidden, cfg, impl: str = "reference"):
+    """Full-sequence Mamba2 mixer: [B, S, D] -> [B, S, D]."""
+    bsz, s, _ = hidden.shape
+    din, n, h, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    z, x_in, bc_in, dt_raw = _project(p, hidden, cfg)
+    x_conv, _ = _causal_conv(x_in, p["conv_x_w"], p["conv_x_b"])
+    bc_conv, _ = _causal_conv(bc_in, p["conv_bc_w"], p["conv_bc_b"])
+    x = x_conv.reshape(bsz, s, h, pd)
+    b_mat = bc_conv[..., :n]
+    c_mat = bc_conv[..., n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    if impl == "pallas":
+        from repro.kernels.ssd_scan import ops as ssd_ops
+        y = ssd_ops.ssd(x, a, b_mat, c_mat, dt, p["d_skip"], cfg.ssd_chunk)
+    else:
+        y = ssd_chunked(x, a, b_mat, c_mat, dt, p["d_skip"], cfg.ssd_chunk)
+    y = y.reshape(bsz, s, din)
+    y = common.rmsnorm(y * jax.nn.silu(z), p["norm_w"])
+    return y @ p["out_proj"]
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+def init_ssm_cache(batch: int, cfg, dtype):
+    return {
+        "conv_x": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner), dtype),
+        "conv_bc": jnp.zeros((batch, cfg.conv_width - 1, 2 * cfg.ssm_state),
+                             dtype),
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state,
+                            cfg.ssm_headdim), jnp.float32),
+    }
+
+
+def mamba2_step(p, hidden, cache, cfg):
+    """One-token decode: [B, 1, D] -> ([B, 1, D], new_cache)."""
+    bsz = hidden.shape[0]
+    din, n, h, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    z, x_in, bc_in, dt_raw = _project(p, hidden, cfg)
+    x_conv, conv_x = _causal_conv(x_in, p["conv_x_w"], p["conv_x_b"],
+                                  prev=cache["conv_x"])
+    bc_conv, conv_bc = _causal_conv(bc_in, p["conv_bc_w"], p["conv_bc_b"],
+                                    prev=cache["conv_bc"])
+    x = x_conv.reshape(bsz, 1, h, pd)
+    b_mat = bc_conv[..., :n]
+    c_mat = bc_conv[..., n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+
+    xt = x[:, 0].astype(jnp.float32)                       # [B,H,P]
+    dtt = dt[:, 0]                                         # [B,H]
+    decay = jnp.exp(dtt * a[None, :])
+    inject = jnp.einsum("bn,bhp->bhnp", b_mat[:, 0].astype(jnp.float32),
+                        xt * dtt[..., None])
+    state = cache["state"] * decay[..., None, None] + inject
+    y = jnp.einsum("bn,bhnp->bhp", c_mat[:, 0].astype(jnp.float32), state)
+    y = y + xt * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, din).astype(hidden.dtype)
+    y = common.rmsnorm(y * jax.nn.silu(z), p["norm_w"])
+    return y @ p["out_proj"], {"conv_x": conv_x, "conv_bc": conv_bc,
+                               "state": state}

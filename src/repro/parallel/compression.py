@@ -1,0 +1,66 @@
+"""Error-feedback gradient compression for the cross-pod all-reduce.
+
+At 2 pods x 256 chips, the pod axis's gradient all-reduce traverses the
+(scarce) inter-pod links; int8 block-quantized gradients with error
+feedback cut those bytes 4x with negligible convergence impact (the
+residual carries the quantization error into the next step — Seide et al.,
+Karimireddy et al.).
+
+Usage in the train step (see tests/test_compression.py):
+
+    comp, new_residual = compress(grads + residual)
+    grads_out = decompress(comp)            # what the all-reduce carries
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _quantize_leaf(g):
+    flat = g.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32),
+            "shape": g.shape, "pad": pad}
+
+
+def _dequantize_leaf(c):
+    blocks = c["q"].astype(jnp.float32) * c["scale"]
+    flat = blocks.reshape(-1)
+    n = 1
+    for d in c["shape"]:
+        n *= d
+    return flat[:n].reshape(c["shape"])
+
+
+def compress(grads, residual=None):
+    """Returns (compressed tree, new error-feedback residual tree)."""
+    if residual is not None:
+        grads = jax.tree.map(lambda g, r: g.astype(jnp.float32) + r,
+                             grads, residual)
+    comp = jax.tree.map(_quantize_leaf, grads)
+    deq = jax.tree.map(_dequantize_leaf, comp,
+                       is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+    new_residual = jax.tree.map(lambda g, d: g.astype(jnp.float32) - d,
+                                grads, deq)
+    return comp, new_residual
+
+
+def decompress(comp):
+    return jax.tree.map(_dequantize_leaf, comp,
+                        is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+
+
+def compressed_bytes(comp) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(comp):
+        if hasattr(leaf, "size") and hasattr(leaf, "dtype"):
+            total += leaf.size * leaf.dtype.itemsize
+    return total

@@ -1,0 +1,272 @@
+"""Logical-axis sharding rules: parameter/optimizer/cache/batch PartitionSpecs.
+
+Parallelism dimensions:
+- DP  — batch over ("pod", "data") (pod = outer DP across pods)
+- TP  — "model": attention heads *or* head_dim, FFN hidden, experts (EP),
+         SSD heads, vocab
+- SP  — decode KV-cache sequence over "model" (+"data" when batch=1):
+         sequence-parallel flash-decode; GSPMD inserts the partial-softmax
+         combine collectives
+- ZeRO-1 — optimizer state over "data"; optional FSDP for params
+
+Attention TP mode is per-architecture: "heads" requires n_heads and
+n_kv_heads divisible by the TP size (qwen3/olmoe/dbrx/zamba2/seamless/
+pixtral at TP=16); "hd" shards the head_dim axis instead and works for
+every architecture (head_dim is a multiple of 16 throughout) at the cost of
+two extra all-reduces per attention (score + output contractions) — the
+exact trade the §Perf hillclimb measures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch import mesh as mesh_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    attn_mode: str = "seq"           # "seq" | "heads" | "hd" | "q_heads"
+    fsdp: bool = False               # shard params over "data" too
+    zero1: bool = True               # shard optimizer state over "data"
+    seq_shard_decode: bool = True    # SP for KV caches in decode
+    kv_cache_dtype: str = "bfloat16"  # "int8" halves decode cache traffic
+    weight_dtype: str = "bfloat16"   # "int8" = W8 quantized serving (decode)
+    microbatches: int = 1            # gradient-accumulation microbatches
+    moe_expert_2d: bool = False      # experts over model x d_ff over data
+    #   (replaces FSDP's per-layer expert-weight all-gathers with activation
+    #    reshards — the dbrx §Perf winner)
+
+
+def default_policy(cfg: ModelConfig, tp: int = 16) -> ShardingPolicy:
+    """heads-TP (Megatron-style, 2 all-reduces/layer) when the head counts
+    divide the TP size; otherwise sequence-parallel attention (Q sharded
+    over seq, K/V gathered) — "hd" (head_dim contraction sharding) is legal
+    everywhere but all-reduces the f32 score matrices (quadratic bytes) and
+    exists only as a hillclimb ablation."""
+    heads_ok = (cfg.n_heads and cfg.n_heads % tp == 0
+                and cfg.n_kv_heads % tp == 0)
+    big = cfg.name.startswith(("dbrx", "pixtral"))
+    return ShardingPolicy(attn_mode="heads" if heads_ok else "seq", fsdp=big)
+
+
+# --- trace-time context: models consult this for activation constraints ----
+_ACTIVE: dict = {"mesh": None, "policy": None}
+
+
+def set_active(mesh, policy: ShardingPolicy):
+    _ACTIVE["mesh"], _ACTIVE["policy"] = mesh, policy
+
+
+def clear_active():
+    _ACTIVE["mesh"] = _ACTIVE["policy"] = None
+
+
+def active_policy() -> Optional[ShardingPolicy]:
+    return _ACTIVE["policy"]
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint against the active mesh (no-op outside a
+    distribution context, so model code stays runnable on one device)."""
+    mesh = _ACTIVE["mesh"]
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def active_dp_axes():
+    mesh = _ACTIVE["mesh"]
+    return mesh_lib.dp_axes(mesh) if mesh is not None else ()
+
+
+def _divisible(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+class Sharder:
+    """Builds PartitionSpec trees for one (mesh, cfg, policy)."""
+
+    def __init__(self, mesh, cfg: ModelConfig, policy: ShardingPolicy):
+        self.mesh = mesh
+        self.cfg = cfg
+        self.policy = policy
+        self.tp = mesh_lib.axis_size(mesh, "model")
+        self.dp_axes = mesh_lib.dp_axes(mesh)
+        self.dp = mesh_lib.axis_size(mesh, self.dp_axes)
+        self.data = mesh_lib.axis_size(mesh, "data")
+
+    # -- helpers ------------------------------------------------------------
+    def _fsdp(self, dim: int) -> Optional[str]:
+        if self.policy.fsdp and _divisible(dim, self.data):
+            return "data"
+        return None
+
+    def _tp(self, dim: int) -> Optional[str]:
+        return "model" if _divisible(dim, self.tp) else None
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    # -- parameters ----------------------------------------------------------
+    def param_spec(self, path: tuple, leaf) -> P:
+        names = [getattr(k, "key", getattr(k, "name", str(k)))
+                 for k in path]
+        name = names[-1]
+        shape = leaf.shape
+        heads_mode = self.policy.attn_mode == "heads"
+        cfg = self.cfg
+
+        if name in ("embed",):                       # [V, D]
+            return P(self._tp(shape[0]), self._fsdp(shape[1]))
+        if name == "lm_head":                        # [D, V]
+            return P(self._fsdp(shape[0]), self._tp(shape[1]))
+        mode = self.policy.attn_mode
+        if name in ("wq", "wk", "wv"):               # [D, H|KV, hd]
+            if mode == "heads" and _divisible(shape[1], self.tp):
+                return P(self._fsdp(shape[0]), "model", None)
+            if mode == "q_heads":
+                # GQA-decode TP: shard only the q heads; kv projections are
+                # replicated so every rank serves its heads from the full
+                # (batch-sharded) local cache with no score collectives
+                if name == "wq" and _divisible(shape[1], self.tp):
+                    return P(self._fsdp(shape[0]), "model", None)
+                return P(self._fsdp(shape[0]), None, None)
+            if mode == "hd":
+                return P(self._fsdp(shape[0]), None, self._tp(shape[2]))
+            return P(self._fsdp(shape[0]), None, None)   # seq: replicated
+        if name == "wo":                             # [H, hd, D]
+            if mode in ("heads", "q_heads") and _divisible(shape[0], self.tp):
+                return P("model", None, self._fsdp(shape[2]))
+            if mode == "hd":
+                return P(None, self._tp(shape[1]), self._fsdp(shape[2]))
+            return P(None, None, self._fsdp(shape[2]))
+        if name in ("w_gate", "w_up"):
+            if leaf.ndim == 3:                       # MoE [E, D, F]
+                if self.policy.moe_expert_2d and _divisible(shape[2],
+                                                            self.data):
+                    return P(self._tp(shape[0]), None, "data")
+                return P(self._tp(shape[0]), self._fsdp(shape[1]), None)
+            return P(self._fsdp(shape[0]), self._tp(shape[1]))
+        if name == "w_down":
+            if leaf.ndim == 3:                       # MoE [E, F, D]
+                if self.policy.moe_expert_2d and _divisible(shape[1],
+                                                            self.data):
+                    return P(self._tp(shape[0]), "data", None)
+                return P(self._tp(shape[0]), None, self._fsdp(shape[2]))
+            return P(self._tp(shape[0]), self._fsdp(shape[1]))
+        if name == "router":                         # [D, E]
+            return P(None, None)
+        # ---- mamba2 ----
+        if name in ("w_z", "w_x"):                   # [D, d_inner]
+            return P(self._fsdp(shape[0]), self._tp(shape[1]))
+        if name in ("w_b", "w_c"):                   # [D, N] (shared): repl
+            return P(self._fsdp(shape[0]), None)
+        if name == "w_dt":                           # [D, H]
+            return P(self._fsdp(shape[0]), self._tp(shape[1]))
+        if name == "out_proj":                       # [d_inner, D]
+            return P(self._tp(shape[0]), self._fsdp(shape[1]))
+        if name in ("conv_x_w", "conv_x_b", "norm_w"):
+            return P(self._tp(shape[0]), *([None] * (leaf.ndim - 1)))
+        if name in ("a_log", "d_skip", "dt_bias"):   # [H]
+            return P(self._tp(shape[0]))
+        if name in ("conv_bc_w", "conv_bc_b"):
+            return P(*([None] * leaf.ndim))
+        # norms, biases, small vectors: replicated
+        return P(*([None] * leaf.ndim))
+
+    def param_specs(self, params_abstract):
+        return jax.tree_util.tree_map_with_path(self.param_spec,
+                                                params_abstract)
+
+    def param_shardings(self, params_abstract):
+        return jax.tree.map(self.named, self.param_specs(params_abstract),
+                            is_leaf=lambda x: isinstance(x, P))
+
+    # -- optimizer state (ZeRO-1) ---------------------------------------------
+    def zero_spec(self, spec: P, shape) -> P:
+        """Add "data" sharding to the first free, divisible dim."""
+        if not self.policy.zero1:
+            return spec
+        used = set()
+        for s in spec:
+            if s is None:
+                continue
+            for a in (s if isinstance(s, tuple) else (s,)):
+                used.add(a)
+        if "data" in used:
+            return spec
+        parts = list(spec)
+        for i, (s, dim) in enumerate(zip(parts, shape)):
+            if s is None and _divisible(dim, self.data):
+                parts[i] = "data"
+                return P(*parts)
+            if s == "model" and _divisible(dim, self.data * self.tp):
+                parts[i] = ("model", "data")
+                return P(*parts)
+        return spec
+
+    def opt_specs(self, params_abstract):
+        pspecs = self.param_specs(params_abstract)
+        return jax.tree.map(
+            lambda spec, leaf: self.zero_spec(spec, leaf.shape),
+            pspecs, params_abstract,
+            is_leaf=lambda x: isinstance(x, P))
+
+    # -- activations / batches -------------------------------------------------
+    def batch_spec(self) -> P:
+        return P(self.dp_axes, None)
+
+    def frontend_spec(self) -> P:
+        return P(self.dp_axes, None, None)
+
+    def logits_spec(self, batch: Optional[int] = None) -> P:
+        bdp = self.dp_axes
+        if batch is not None and not _divisible(batch, self.dp):
+            bdp = None
+        return P(bdp, None, self._tp(self.cfg.vocab))
+
+    # -- KV / SSM caches ---------------------------------------------------------
+    def cache_spec(self, path: tuple, leaf, batch: int) -> P:
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = names[-1]
+        shape = leaf.shape
+        bdp = self.dp_axes if _divisible(batch, self.dp) else None
+        b_data = ("data" if bdp is None and _divisible(batch, self.data)
+                  else bdp)
+        if name in ("k", "v", "cross_k", "cross_v"):  # [B, L, KV, hd]
+            mode = self.policy.attn_mode
+            if mode == "q_heads":
+                # full cache per rank (its q heads need all positions);
+                # batch over data only
+                return P(b_data, None, None, None)
+            if mode == "hd":
+                # head_dim over model; free the seq axis for "data" when the
+                # batch can't use it (long-context B=1 decode)
+                seq = ("data" if bdp is None
+                       and _divisible(shape[1], self.data) else None)
+                return P(bdp, seq, None, self._tp(shape[3]))
+            seq_axes: tuple = ()
+            if self.policy.seq_shard_decode:
+                if bdp is None and _divisible(shape[1], self.data * self.tp):
+                    seq_axes = ("data", "model")
+                elif _divisible(shape[1], self.tp):
+                    seq_axes = ("model",)
+            return P(bdp, seq_axes if seq_axes else None, None, None)
+        if name == "state":                           # [B, H, N, P]
+            return P(bdp, self._tp(shape[1]), None, None)
+        if name == "conv_x":                          # [B, W-1, d_inner]
+            return P(bdp, None, self._tp(shape[2]))
+        if name == "conv_bc":
+            return P(bdp, None, None)
+        if name == "pos":
+            return P()
+        return P(*([None] * leaf.ndim))
+
+    def cache_specs(self, caches_abstract, batch: int):
+        return jax.tree_util.tree_map_with_path(
+            lambda p, l: self.cache_spec(p, l, batch), caches_abstract)

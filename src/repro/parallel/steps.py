@@ -1,0 +1,198 @@
+"""The jit-compiled step functions + their shardings, per (arch x shape).
+
+``build_step`` returns everything the dry-run, the trainer and the server
+need for one cell: the step callable, abstract inputs (ShapeDtypeStructs —
+no allocation) and in/out shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import common, lm
+from repro.optim import adamw
+from repro.parallel.sharding import Sharder, ShardingPolicy, default_policy
+
+
+@dataclasses.dataclass
+class StepBundle:
+    name: str
+    fn: Callable
+    abstract_inputs: tuple
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: tuple = ()
+
+    def lower(self, mesh=None):
+        # shardings are NamedShardings (mesh baked in): no context needed
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings,
+                         donate_argnums=self.donate_argnums)
+        return jitted.lower(*self.abstract_inputs)
+
+
+def _frontend_abstract(cfg: ModelConfig, batch: int, seq: int):
+    dt = common.dtype_of(cfg)
+    if cfg.family == "vlm":
+        return jax.ShapeDtypeStruct((batch, cfg.frontend_tokens, cfg.d_model),
+                                    dt)
+    if cfg.family == "encdec":
+        return jax.ShapeDtypeStruct((batch, seq, cfg.d_model), dt)
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Abstract model inputs for one shape cell (the dry-run contract)."""
+    b, s = shape.global_batch, shape.seq_len
+    text_s = s - cfg.frontend_tokens if cfg.family == "vlm" else s
+    tokens = jax.ShapeDtypeStruct((b, text_s), jnp.int32)
+    if shape.kind == "train":
+        batch = {"tokens": tokens,
+                 "labels": jax.ShapeDtypeStruct((b, text_s), jnp.int32)}
+        fe = _frontend_abstract(cfg, b, s)
+        if fe is not None:
+            batch["frontend"] = fe
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": tokens}
+        fe = _frontend_abstract(cfg, b, s)
+        if fe is not None:
+            batch["frontend"] = fe
+        return batch
+    # decode: one new token over caches of length seq_len
+    return {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
+               policy: Optional[ShardingPolicy] = None,
+               opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig()) -> StepBundle:
+    policy = policy or default_policy(cfg, mesh.shape["model"])
+    # models consult this at trace time for activation constraints
+    # (sequence-parallel attention etc.); stays set through .lower()
+    import repro.parallel.sharding as shctx
+    shctx.set_active(mesh, policy)
+    sh = Sharder(mesh, cfg, policy)
+    params_abs = lm.abstract_params(cfg)
+    p_shard = sh.param_shardings(params_abs)
+    dp = sh.batch_spec()
+
+    if shape.kind == "train":
+        opt_abs = adamw.abstract_state(params_abs)
+        opt_specs = sh.opt_specs(params_abs)
+        opt_shard = {
+            "m": jax.tree.map(sh.named, opt_specs,
+                              is_leaf=lambda x: isinstance(x, P)),
+            "v": jax.tree.map(sh.named, opt_specs,
+                              is_leaf=lambda x: isinstance(x, P)),
+            "master": jax.tree.map(sh.named, opt_specs,
+                                   is_leaf=lambda x: isinstance(x, P)),
+            "step": sh.named(P()),
+        }
+        batch_abs = input_specs(cfg, shape)
+        batch_shard = {"tokens": sh.named(dp), "labels": sh.named(dp)}
+        if "frontend" in batch_abs:
+            batch_shard["frontend"] = sh.named(sh.frontend_spec())
+
+        mb = max(policy.microbatches, 1)
+
+        def train_step(params, opt, batch):
+            if mb == 1:
+                loss, grads = jax.value_and_grad(lm.loss_fn)(params, batch,
+                                                             cfg)
+            else:
+                # gradient accumulation: activations live for one microbatch
+                # at a time (memory / collective trade measured in §Perf)
+                split = {k: v.reshape((mb, v.shape[0] // mb) + v.shape[1:])
+                         for k, v in batch.items()}
+                loss = 0.0
+                grads = jax.tree.map(jnp.zeros_like, params)
+                for i in range(mb):
+                    piece = {k: v[i] for k, v in split.items()}
+                    li, gi = jax.value_and_grad(lm.loss_fn)(params, piece,
+                                                            cfg)
+                    loss = loss + li / mb
+                    grads = jax.tree.map(lambda a, b: a + b / mb, grads, gi)
+            new_params, new_opt, metrics = adamw.apply(grads, opt, opt_cfg)
+            metrics["loss"] = loss
+            return new_params, new_opt, metrics
+
+        metrics_shard = {"loss": sh.named(P()), "lr": sh.named(P()),
+                         "grad_norm": sh.named(P())}
+        return StepBundle(
+            f"{cfg.name}:{shape.name}:train", train_step,
+            (params_abs, opt_abs, batch_abs),
+            (p_shard, opt_shard, batch_shard),
+            (p_shard, opt_shard, metrics_shard),
+            donate_argnums=(0, 1))
+
+    if shape.kind == "prefill":
+        batch_abs = input_specs(cfg, shape)
+        batch_shard = {"tokens": sh.named(dp)}
+        if "frontend" in batch_abs:
+            batch_shard["frontend"] = sh.named(sh.frontend_spec())
+        total_len = shape.seq_len + 128          # prompt + generation room
+
+        def prefill_step(params, batch):
+            logits, caches = lm.prefill(params, batch["tokens"], cfg,
+                                        max_len=total_len,
+                                        frontend_embeds=batch.get("frontend"))
+            return logits, caches
+
+        caches_abs = jax.eval_shape(
+            lambda p, b: prefill_step(p, b)[1], params_abs, batch_abs)
+        cache_specs = sh.cache_specs(caches_abs, shape.global_batch)
+        cache_shard = jax.tree.map(sh.named, cache_specs,
+                                   is_leaf=lambda x: isinstance(x, P))
+        return StepBundle(
+            f"{cfg.name}:{shape.name}:prefill", prefill_step,
+            (params_abs, batch_abs),
+            (p_shard, batch_shard),
+            (sh.named(sh.logits_spec(shape.global_batch)), cache_shard))
+
+    # ---- decode: one token over caches of length seq_len --------------------
+    b = shape.global_batch
+    enc_len = shape.seq_len if cfg.family == "encdec" else 0
+    caches_abs = lm.abstract_caches(b, shape.seq_len, cfg, enc_len=enc_len)
+    if policy.kv_cache_dtype == "int8":
+        def _as_int8(path, leaf):
+            name = getattr(path[-1], "key", "")
+            if name in ("k", "v", "cross_k", "cross_v"):
+                return jax.ShapeDtypeStruct(leaf.shape, jnp.int8)
+            return leaf
+        caches_abs = jax.tree_util.tree_map_with_path(_as_int8, caches_abs)
+    dequant = None
+    if policy.weight_dtype == "int8":
+        # W8 quantized serving: weights live in HBM as int8, dequantized to
+        # bf16 on use (per-channel scales omitted in the structural dry-run)
+        def _w8(leaf):
+            if leaf.ndim >= 2 and jnp.issubdtype(leaf.dtype, jnp.floating):
+                return jax.ShapeDtypeStruct(leaf.shape, jnp.int8)
+            return leaf
+        params_abs = jax.tree.map(_w8, params_abs)
+        p_shard = sh.param_shardings(params_abs)
+        dt = common.dtype_of(cfg)
+        dequant = lambda p: jax.tree.map(
+            lambda x: x.astype(dt) if x.dtype == jnp.int8 else x, p)
+    cache_specs = sh.cache_specs(caches_abs, b)
+    cache_shard = jax.tree.map(sh.named, cache_specs,
+                               is_leaf=lambda x: isinstance(x, P))
+    token_abs = input_specs(cfg, shape)["token"]
+    token_shard = sh.named(dp if b % sh.dp == 0 else P(None, None))
+
+    def serve_step(params, caches, token):
+        if dequant is not None:
+            params = dequant(params)
+        logits, new_caches = lm.decode_step(params, token, caches, cfg)
+        return logits, new_caches
+
+    return StepBundle(
+        f"{cfg.name}:{shape.name}:decode", serve_step,
+        (params_abs, caches_abs, token_abs),
+        (p_shard, cache_shard, token_shard),
+        (sh.named(sh.logits_spec(shape.global_batch)), cache_shard),
+        donate_argnums=(1,))

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# Tests run on the default single CPU device (the dry-run subprocesses set
+# their own XLA_FLAGS); keep JAX quiet and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,117 @@
+"""Circuit model: Table 3 reproduction, waveforms, vendor/temperature."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.dram import circuit, timing
+
+
+class TestTable3:
+    def test_exact_reproduction(self):
+        """Guardbanded+quantized latencies == the paper's Table 3, all 30
+        cells."""
+        t3 = circuit.table3()
+        for op in ("rcd", "rp", "ras"):
+            np.testing.assert_array_equal(t3[op], circuit.TABLE3_PUBLISHED[op])
+
+    def test_monotone_in_voltage(self):
+        v = np.linspace(0.9, 1.35, 50)
+        for op in ("rcd", "rp", "ras"):
+            raw = np.asarray(circuit.raw_latency(op, v))
+            assert (np.diff(raw) <= 1e-9).all(), f"{op} not decreasing in V"
+
+    def test_timing_for_voltage(self):
+        t = circuit.timing_for_voltage(0.9)
+        assert (t.t_rcd, t.t_rp, t.t_ras) == (21.25, 26.25, 52.50)
+        t = circuit.timing_for_voltage(1.35)
+        assert (t.t_rcd, t.t_rp, t.t_ras) == (13.75, 13.75, 36.25)
+
+
+class TestWaveform:
+    def test_crossings_match_closed_form(self):
+        """The bitline waveform's 75% crossing reproduces raw tRCD."""
+        v = np.array([1.35, 1.2, 1.0, 0.9])
+        t_rcd, _, t_rp = circuit.waveform_crossing_times(v)
+        want = np.asarray(circuit.raw_latency("rcd", v))
+        np.testing.assert_allclose(np.asarray(t_rcd), want, atol=0.15)
+
+    def test_slower_at_lower_voltage(self):
+        ts, vbl = circuit.bitline_waveform(np.array([1.35, 0.9]))
+        # at 20 ns, the 1.35 V bitline is closer to its rail (relative)
+        i = int(np.searchsorted(np.asarray(ts), 20.0))
+        rel = np.asarray(vbl)[:, i] / np.array([1.35, 0.9])
+        assert rel[0] > rel[1]
+
+
+class TestVendors:
+    def test_reliable_min_at_nominal(self):
+        """Section 4.1: 10 ns reliable tRCD/tRP at 1.35 V for all vendors."""
+        for v in "ABC":
+            assert circuit.measured_min_latency("rcd", 1.35, v) == 10.0
+            assert circuit.measured_min_latency("rp", 1.35, v) == 10.0
+
+    def test_vendor_c_is_precharge_limited(self):
+        """~60% of C DIMMs need tRP=12.5 ns at 1.25 V (Section 4.2)."""
+        zs = np.linspace(-2, 2, 41)
+        frac = np.mean([circuit.measured_min_latency("rp", 1.25, "C", 20, z) > 10
+                        for z in zs])
+        assert 0.3 <= frac <= 0.8
+
+    def test_vendor_a_fine_at_1150(self):
+        """A DIMMs all operate reliably at 1.15 V with 10 ns (Section 4.2)."""
+        zs = np.linspace(-2, 2, 41)
+        worst_rcd = max(circuit.measured_min_latency("rcd", 1.15, "A", 20, z)
+                        for z in zs)
+        worst_rp = max(circuit.measured_min_latency("rp", 1.15, "A", 20, z)
+                       for z in zs)
+        assert worst_rcd == 10.0 and worst_rp == 10.0
+
+    def test_first_increase_order(self):
+        """First latency increase at ~1.10 (A) / ~1.125 (B) / ~1.25 (C)."""
+        def first_v(vendor):
+            for v in np.round(np.arange(1.35, 0.99, -0.025), 4):
+                if (circuit.measured_min_latency("rcd", v, vendor) > 10
+                        or circuit.measured_min_latency("rp", v, vendor) > 10):
+                    return v
+            return 0.0
+        va, vb, vc = first_v("A"), first_v("B"), first_v("C")
+        assert vc > vb >= va
+        assert 1.2 <= vc <= 1.3 and 1.075 <= va <= 1.15
+
+
+class TestTemperature:
+    def test_vendor_a_unobservable(self):
+        for v in [1.35, 1.25, 1.15]:
+            assert (circuit.measured_min_latency("rcd", v, "A", 70.0)
+                    == circuit.measured_min_latency("rcd", v, "A", 20.0))
+
+    def test_vendor_c_precharge_bump_at_high_v(self):
+        """Fig. 10: C's tRP rises 10 -> 12.5 ns at 70C at 1.35/1.30 V, and
+        the effect is masked at/below 1.25 V."""
+        assert circuit.measured_min_latency("rp", 1.35, "C", 20.0) == 10.0
+        assert circuit.measured_min_latency("rp", 1.35, "C", 70.0) == 12.5
+        assert (circuit.measured_min_latency("rp", 1.25, "C", 70.0)
+                == circuit.measured_min_latency("rp", 1.25, "C", 20.0))
+
+    def test_vendor_b_knee(self):
+        """B unaffected above 1.15 V supply."""
+        assert (circuit.measured_min_latency("rp", 1.25, "B", 70.0)
+                == circuit.measured_min_latency("rp", 1.25, "B", 20.0))
+
+
+@settings(max_examples=25, deadline=None)
+@given(v=st.floats(0.9, 1.35), temp=st.floats(20.0, 70.0),
+       vendor=st.sampled_from("ABC"))
+def test_property_latency_positive_and_temp_monotone(v, temp, vendor):
+    for op in ("rcd", "rp"):
+        cold = float(np.asarray(circuit.vendor_raw_latency(op, v, vendor, 20.0)))
+        hot = float(np.asarray(circuit.vendor_raw_latency(op, v, vendor, temp)))
+        assert hot >= cold - 1e-9 > 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(raw=st.floats(1.0, 40.0))
+def test_property_guardband_quantization(raw):
+    q = float(timing.guardband_and_quantize(raw))
+    assert q >= raw * 1.38 - 1e-9
+    assert abs(q / 1.25 - round(q / 1.25)) < 1e-9

@@ -1,0 +1,81 @@
+"""Chip-population model: Table 7 round-trip, Fig. 4/9/11 behaviors."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.dram import chips
+
+
+def test_table7_population():
+    pop = chips.population()
+    assert len(pop) == 31
+    assert sum(d.vendor == "A" for d in pop) == 10
+    assert sum(d.vendor == "B" for d in pop) == 12
+    assert sum(d.vendor == "C" for d in pop) == 9
+
+
+def test_vmin_roundtrip_all_31():
+    """Re-measuring V_min the paper's way returns Table 7 exactly."""
+    for d in chips.population():
+        assert chips.measured_vmin(d) == d.vmin, d.module
+
+
+def test_error_onset_and_growth():
+    """Fig. 4: zero errors at/above V_min; near-exponential growth below."""
+    d = chips.population()[0]
+    v = np.round(np.arange(1.35, d.vmin - 1e-9, -0.025), 4)
+    assert (d.line_error_fraction(v) == 0).all()
+    below = np.round([d.vmin - 0.025, d.vmin - 0.05], 4)
+    f = d.line_error_fraction(below)
+    assert f[0] > 0 and f[1] > f[0] * 3        # steep growth
+
+
+def test_higher_latency_removes_errors():
+    """Section 4.2: +2.5 ns tRCD/tRP recovers correctness below V_min."""
+    d = [x for x in chips.population() if x.module == "C2"][0]
+    v = d.vmin - 0.025
+    assert d.line_error_fraction(v, 10.0, 10.0)[0] > 0
+    assert d.line_error_fraction(v, 12.5, 12.5)[0] == 0.0
+
+
+def test_beat_density_defeats_secded():
+    """Fig. 9: failing beats are predominantly >2-bit."""
+    d = [x for x in chips.population() if x.module == "C2"][0]
+    dist = d.beat_error_distribution(d.vmin - 0.05)
+    many = float(np.atleast_1d(dist["many"])[0])
+    one = float(np.atleast_1d(dist["one"])[0])
+    two = float(np.atleast_1d(dist["two"])[0])
+    assert many > 10 * (one + two)
+
+
+def test_retention_calibration():
+    """Fig. 11: no weak cells until >256 ms; ~66 cells @2048 ms/20C/1.35V,
+    ~75 @1.15V; ~2510/~2641 @70C."""
+    assert chips.expected_weak_cells(256.0, 20.0, 1.35) == 0.0
+    assert chips.expected_weak_cells(64.0, 70.0, 0.9) == 0.0
+    np.testing.assert_allclose(chips.expected_weak_cells(2048, 20, 1.35), 66, rtol=0.02)
+    np.testing.assert_allclose(chips.expected_weak_cells(2048, 20, 1.15), 75, rtol=0.05)
+    np.testing.assert_allclose(chips.expected_weak_cells(2048, 70, 1.35), 2510, rtol=0.02)
+    np.testing.assert_allclose(chips.expected_weak_cells(2048, 70, 1.15), 2641, rtol=0.05)
+
+
+def test_retention_voltage_insensitive():
+    """The paper's conclusion: reduced voltage does NOT require faster
+    refresh (effect statistically insignificant / small)."""
+    base = chips.expected_weak_cells(512, 20, 1.35)
+    low = chips.expected_weak_cells(512, 20, 1.15)
+    assert low <= base * 1.25 + 3
+
+
+@settings(max_examples=20, deadline=None)
+@given(vi=st.integers(0, 30), dv=st.floats(0.0, 0.2),
+       extra=st.floats(0.0, 5.0))
+def test_property_error_fraction_monotone(vi, dv, extra):
+    """Errors never decrease as voltage drops, never increase as latency
+    rises."""
+    d = chips.population()[vi]
+    v = max(d.vmin - dv, 1.02)
+    f_low_lat = d.line_error_fraction(v, 10.0, 10.0)[0]
+    f_hi_lat = d.line_error_fraction(v, 10.0 + extra, 10.0 + extra)[0]
+    f_lower_v = d.line_error_fraction(max(v - 0.025, 1.0), 10.0, 10.0)[0]
+    assert f_hi_lat <= f_low_lat + 1e-12
+    assert f_lower_v >= f_low_lat - 1e-12

@@ -1,0 +1,110 @@
+"""Error injection, spatial locality (Fig. 8), Test 1, data patterns."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.dram import chips, errors, test1
+from repro.kernels.voltage_inject import ops as inject_ops
+
+
+def _dimm(module):
+    return [d for d in chips.population() if d.module == module][0]
+
+
+class TestSpatialLocality:
+    def test_vendor_c_bank_clustering(self):
+        """Fig. 8b: Vendor C errors concentrate in a subset of banks."""
+        d = _dimm("C2")
+        prob = errors.error_probability_map(d, d.vmin - 0.025)
+        per_bank = prob.max(axis=1)
+        assert (per_bank > 1e-6).sum() < 8      # not all banks affected
+        assert (per_bank > 1e-6).sum() >= 1
+
+    def test_vendor_b_row_clustering(self):
+        """Fig. 8a: Vendor B errors cluster in row bands across banks."""
+        d = _dimm("B5")
+        prob = errors.error_probability_map(d, d.vmin - 0.025)
+        per_group = prob.mean(axis=0)
+        hot = per_group > per_group.mean() + 3 * per_group.std() * 0 + 1e-9
+        # hot row-groups exist and are a minority
+        assert 0 < hot.sum() < prob.shape[1] / 2
+
+    def test_error_free_regions_allow_standard_latency(self):
+        """Section 6.5 premise: some banks have zero error probability at
+        one step below V_min."""
+        d = _dimm("C2")
+        prob = errors.error_probability_map(d, d.vmin - 0.025)
+        assert (prob.max(axis=1) == 0).any()
+
+
+class TestSecded:
+    def test_secded_insufficient(self):
+        d = _dimm("C2")
+        assert not errors.secded_is_sufficient(d, d.vmin - 0.05)
+
+    def test_outcome_fractions_sum(self):
+        d = _dimm("B2")
+        o = errors.secded_outcomes(d, d.vmin - 0.05)
+        total = o.clean + o.corrected + o.detected + o.undetected_or_mis
+        np.testing.assert_allclose(total, 1.0, atol=1e-9)
+
+
+class TestTest1:
+    def test_no_errors_at_vmin(self):
+        d = _dimm("A1")
+        r = test1.run(d, d.vmin, rows=32)
+        assert r.bit_errors == 0
+
+    def test_errors_below_vmin(self):
+        d = _dimm("C2")
+        r = test1.run(d, d.vmin - 0.075, rows=32)
+        assert r.bit_errors > 0
+
+    def test_latency_recovery(self):
+        d = _dimm("C2")
+        best = test1.find_min_latency(d, d.vmin - 0.025)
+        assert best is not None
+        assert max(best) >= 12.5                 # needs a real increase
+        r = test1.run(d, d.vmin - 0.025, t_rcd=best[0], t_rp=best[1], rows=32)
+        assert r.bit_errors == 0
+
+    def test_below_recovery_floor_unfixable(self):
+        """Section 4.2: very low voltage is unrecoverable by latency."""
+        d = _dimm("A1")
+        assert test1.find_min_latency(d, 1.05) is None
+
+    def test_data_pattern_no_significant_effect(self):
+        """Appendix B: data pattern does not consistently change the BER."""
+        d = _dimm("C2")
+        v = d.vmin - 0.05
+        bers = [test1.run(d, v, pattern_group=g, rows=32, seed=7).ber
+                for g in test1.PATTERN_GROUPS]
+        assert max(bers) < 3 * max(min(bers), 1e-12) + 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**30), rows=st.sampled_from([8, 16]),
+       words=st.sampled_from([1024, 2048]))
+def test_property_inject_kernel_bitexact(seed, rows, words):
+    key = jax.random.key(seed)
+    data = jax.random.bits(key, (rows, words), dtype=jnp.uint32)
+    prob = jax.random.uniform(jax.random.key(seed + 1), (rows,),
+                              jnp.float32, 0, 0.4)
+    rw = jax.random.bits(jax.random.key(seed + 2), (rows, words),
+                         dtype=jnp.uint32)
+    pls = jax.random.bits(jax.random.key(seed + 3), (2, rows, words),
+                          dtype=jnp.uint32)
+    a = inject_ops.inject(data, prob, rw, pls, impl="reference")
+    b = inject_ops.inject(data, prob, rw, pls, impl="pallas_interpret")
+    assert bool((a == b).all())
+
+
+def test_inject_zero_prob_identity():
+    data = jnp.arange(8 * 1024, dtype=jnp.uint32).reshape(8, 1024)
+    zero = jnp.zeros((8,), jnp.float32)
+    rw = jax.random.bits(jax.random.key(0), (8, 1024), dtype=jnp.uint32)
+    pls = jax.random.bits(jax.random.key(1), (2, 8, 1024), dtype=jnp.uint32)
+    out = inject_ops.inject(data, zero, rw, pls, impl="reference")
+    assert bool((out == data).all())

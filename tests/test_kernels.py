@@ -1,0 +1,70 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.ssd_scan import ops as ssd_ops
+from repro.models.ssm import ssd_ref
+
+FA_CASES = [
+    # (b, sq, sk, h, kv, hd, causal, window, softcap, dtype)
+    (2, 128, 128, 4, 2, 64, True, None, None, jnp.float32),
+    (1, 256, 256, 8, 4, 64, True, 64, 50.0, jnp.float32),
+    (2, 128, 128, 4, 4, 128, False, None, None, jnp.float32),
+    (1, 128, 128, 2, 1, 256, True, None, 30.0, jnp.float32),
+    (1, 128, 128, 4, 2, 64, True, None, None, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES)
+def test_flash_attention_vs_ref(case):
+    b, sq, sk, h, kv, hd, causal, window, cap, dt = case
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, hd), dt)
+    k = jax.random.normal(ks[1], (b, sk, kv, hd), dt)
+    v = jax.random.normal(ks[2], (b, sk, kv, hd), dt)
+    ref = fa_ops.flash_attention(q, k, v, causal=causal, window=window,
+                                 softcap=cap, impl="reference")
+    pal = fa_ops.flash_attention(q, k, v, causal=causal, window=window,
+                                 softcap=cap, impl="pallas_interpret",
+                                 bq=64, bk=64)
+    tol = 2e-2 if dt == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(pal, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_decode_shape():
+    """Single-token decode via the same kernel (Sq=1 specialization)."""
+    b, sk, h, kv, hd = 2, 256, 4, 2, 64
+    q = jax.random.normal(jax.random.key(0), (b, 1, h, hd))
+    k = jax.random.normal(jax.random.key(1), (b, sk, kv, hd))
+    v = jax.random.normal(jax.random.key(2), (b, sk, kv, hd))
+    ref = fa_ops.flash_attention(q, k, v, causal=False, impl="reference")
+    pal = fa_ops.flash_attention(q, k, v, causal=False,
+                                 impl="pallas_interpret", bq=1, bk=64)
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+SSD_CASES = [
+    (2, 64, 4, 32, 16, 16), (1, 128, 2, 16, 8, 32), (2, 96, 3, 64, 32, 16),
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_kernel_vs_sequential(case):
+    b, s, h, p, n, chunk = case
+    ks = jax.random.split(jax.random.key(0), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+    a = -jnp.exp(jax.random.normal(ks[1], (h,)) * 0.3)
+    bm = jax.random.normal(ks[2], (b, s, n)) * 0.4
+    cm = jax.random.normal(ks[3], (b, s, n)) * 0.4
+    dt = jax.nn.softplus(jax.random.normal(ks[4], (b, s, h)))
+    y_ref, _ = ssd_ref(x, a, bm, cm, dt, jnp.ones((h,)))
+    y_pal = ssd_ops.ssd(x, a, bm, cm, dt, jnp.ones((h,)), chunk,
+                        impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               atol=5e-5, rtol=5e-5)

@@ -1,0 +1,102 @@
+"""Memory-system + core simulation: timing, bandwidth, energy calibration."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dram.timing import TimingParams
+from repro.memsim import core as cm
+from repro.memsim import dram_timing as dtm
+from repro.memsim import system, workloads
+from repro.memsim.system import NOMINAL, voltron_point
+
+
+def test_event_sim_agrees_with_analytic():
+    """The lax.scan bank-state simulator validates the analytic model."""
+    t = TimingParams()
+    ch = dtm.ChannelConfig(n_channels=1)
+    row_hit, bank_par, rate = 0.6, 4.0, 0.01
+    trace = dtm.synth_trace(4000, row_hit, bank_par, rate, seed=1)
+    lat, acts = dtm.simulate_trace(
+        *trace, t.t_rcd, t.t_rp, t.t_ras, 13.75, ch.transfer_ns)
+    sim_mean = float(jnp.mean(lat[500:]))
+    ana = dtm.access_latency(t, ch, row_hit, cm.CONFLICT_FRAC, rate, bank_par)
+    # same regime within 40% (the analytic model is a queueing approx)
+    assert ana.avg_loaded_ns * 0.5 < sim_mean < ana.avg_loaded_ns * 2.0
+
+
+def test_event_sim_latency_grows_at_low_voltage():
+    ch = dtm.ChannelConfig(n_channels=1)
+    trace = dtm.synth_trace(2000, 0.5, 4.0, 0.012, seed=2)
+    t_hi = TimingParams()
+    t_lo = TimingParams(21.25, 26.25, 52.50)      # Table 3 @ 0.90 V
+    lat_hi, _ = dtm.simulate_trace(*trace, t_hi.t_rcd, t_hi.t_rp, t_hi.t_ras,
+                                   13.75, ch.transfer_ns)
+    lat_lo, _ = dtm.simulate_trace(*trace, t_lo.t_rcd, t_lo.t_rp, t_lo.t_ras,
+                                   13.75, ch.transfer_ns)
+    assert float(jnp.mean(lat_lo)) > float(jnp.mean(lat_hi))
+
+
+def test_bandwidth_bound_binds_for_mcf():
+    bms = workloads.benchmarks()
+    mcf = (bms["mcf"],) * 4
+    r = system.simulate(mcf)
+    assert r.bus_utilization > 0.3                # memory-intensive
+    # and far above a compute-bound workload's utilization
+    lo = system.simulate((bms["povray"],) * 4)
+    assert r.bus_utilization > 10 * lo.bus_utilization
+
+
+def test_fig15_energy_breakdown():
+    """Baseline shares: non-mem CPU-dominated (~80/20), mem ~47/53."""
+    homog = workloads.homogeneous_workloads()
+    shares = {"mem": [], "non": []}
+    for name, c in homog:
+        r = system.simulate(c)
+        shares["mem" if c[0].memory_intensive else "non"].append(
+            r.energy_j["dram"] / r.energy_j["system"])
+    assert 0.15 <= np.mean(shares["non"]) <= 0.33
+    assert 0.42 <= np.mean(shares["mem"]) <= 0.62
+
+
+@pytest.mark.parametrize("v,lo,hi", [(1.3, 0.0, 1.5), (1.2, 0.3, 2.5),
+                                     (1.1, 1.5, 5.0), (1.0, 4.0, 9.5),
+                                     (0.9, 9.0, 18.0)])
+def test_table5_nonmem_loss_bands(v, lo, hi):
+    """Array voltage scaling, non-mem loss versus the paper's Table 5
+    (targets 0.5/1.4/3.5/7.1/14.2%), within generous bands."""
+    homog = workloads.homogeneous_workloads()
+    non = [c for _, c in homog if not c[0].memory_intensive]
+    losses = [system.evaluate(c, voltron_point(v)).perf_loss_pct for c in non]
+    assert lo <= np.mean(losses) <= hi
+
+
+def test_table5_dram_power_savings():
+    """DRAM power savings ~ array-share * (1 - (V/1.35)^2): 10.4% @1.2V,
+    29.0% @0.9V (paper Table 5), within 3 points."""
+    homog = workloads.homogeneous_workloads()
+    non = [c for _, c in homog if not c[0].memory_intensive]
+    for v, target in [(1.2, 10.4), (1.1, 16.5), (0.9, 29.0)]:
+        s = np.mean([system.evaluate(c, voltron_point(v)).dram_power_savings_pct
+                     for c in non])
+        assert abs(s - target) < 3.0, (v, s)
+
+
+def test_fig13_energy_nonmonotone():
+    """0.9 V gives LOWER system energy savings than 1.0 V for mem-intensive
+    (Section 6.2, third observation)."""
+    homog = workloads.homogeneous_workloads()
+    mem = [c for _, c in homog if c[0].memory_intensive]
+    s10 = np.mean([system.evaluate(c, voltron_point(1.0)).system_energy_savings_pct
+                   for c in mem])
+    s09 = np.mean([system.evaluate(c, voltron_point(0.9)).system_energy_savings_pct
+                   for c in mem])
+    assert s09 < s10
+
+
+def test_mcf_most_latency_tolerant():
+    """Fig. 13: mcf (highest MPKI/MLP) loses least among mem-intensive."""
+    homog = workloads.homogeneous_workloads()
+    mem = {n: c for n, c in homog if c[0].memory_intensive}
+    losses = {n: system.evaluate(c, voltron_point(1.0)).perf_loss_pct
+              for n, c in mem.items()}
+    assert losses["mcf"] <= min(losses.values()) + 0.8

@@ -1,0 +1,52 @@
+"""End-to-end behaviour: train-to-convergence smoke, serve loop, and the
+full Voltron story (characterize -> model -> control) in one test."""
+import jax
+import numpy as np
+
+from repro.core import hbm_adapter, perf_model, voltron
+from repro.dram import chips, circuit
+from repro.launch.train import TrainConfig, run
+from repro.launch.serve import generate
+from repro.configs import base
+from repro.models import lm
+
+
+def test_train_loss_decreases(tmp_path):
+    out = run(TrainConfig(arch="smollm-135m", variant="smoke", steps=30,
+                          batch=4, seq=64, lr=3e-3,
+                          ckpt_dir=str(tmp_path), log_every=100))
+    assert out["steps_run"] == 30
+    assert out["final_loss"] < out["first_loss"] - 0.3
+
+
+def test_serve_generates(tmp_path):
+    cfg = base.get_config("smollm-135m", "smoke")
+    params = lm.init_params(jax.random.key(0), cfg)
+    prompts = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab)
+    toks = generate(cfg, params, prompts, gen_len=8)
+    assert toks.shape == (2, 8)
+    assert int(toks.min()) >= 0 and int(toks.max()) < cfg.vocab
+
+
+def test_full_voltron_pipeline():
+    """The paper's end-to-end story on the simulated substrate:
+    (1) characterization finds the V_min/latency trade-off,
+    (2) the circuit model supplies Table 3 latencies,
+    (3) Eq. 1 is fit from workload sweeps,
+    (4) Algorithm 1 picks voltages that save energy within the target,
+    (5) the TPU adaptation maps the same control law onto roofline terms.
+    """
+    d = chips.population()[0]
+    assert chips.measured_vmin(d) == d.vmin                       # (1)
+    t = circuit.timing_for_voltage(1.0)
+    assert (t.t_rcd, t.t_rp, t.t_ras) == (17.50, 18.75, 45.00)    # (2)
+    m = perf_model.fit()                                          # (3)
+    assert m.r2_high > 0.8
+    from repro.memsim import workloads
+    name, cores = [w for w in workloads.homogeneous_workloads()
+                   if w[1][0].name == "libquantum"][0]
+    r = voltron.run_controller(name, cores, 5.0, n_intervals=5)   # (4)
+    assert r.met_target and r.system_energy_savings_pct > 3.0
+    pred = hbm_adapter.select_state(                              # (5)
+        {"compute_s": 1.0, "memory_s": 0.4, "collective_s": 0.3}, 5.0)
+    assert pred.chip_energy_savings_pct > 0

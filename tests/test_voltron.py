@@ -1,0 +1,120 @@
+"""Voltron controller, Eq. 1 model, MemDVFS baseline, Voltron+BL."""
+import numpy as np
+import pytest
+
+from repro.core import bank_locality, memdvfs, perf_model, voltron
+from repro.dram import chips
+from repro.memsim import workloads
+
+
+@pytest.fixture(scope="module")
+def model():
+    return perf_model.fit()
+
+
+@pytest.fixture(scope="module")
+def homog():
+    return workloads.homogeneous_workloads()
+
+
+class TestPerfModel:
+    def test_fit_quality(self, model):
+        """Paper: R^2 = 0.75 (low-MPKI) / 0.90 (high-MPKI).  Our simulator
+        is less noisy than SPEC on Ramulator, so require at least those."""
+        assert model.r2_low >= 0.70
+        assert model.r2_high >= 0.85
+
+    def test_latency_coefficient_positive(self, model):
+        assert model.coef_low[1] > 0
+        assert model.coef_high[1] > 0
+
+    def test_prediction_monotone_in_latency(self, model):
+        lat = np.array([50.0, 60.0, 70.0, 80.0])
+        pred = model.predict(lat, 10.0, 0.3)
+        assert (np.diff(pred) > 0).all()
+
+
+class TestAlgorithm1:
+    def test_meets_target_homogeneous(self, homog):
+        """Fig. 14a: realized loss within the 5% target for every
+        homogeneous workload."""
+        runs = [voltron.run_controller(n, c, 5.0, n_intervals=6)
+                for n, c in homog]
+        assert all(r.met_target for r in runs), \
+            [(r.workload, r.perf_loss_pct) for r in runs if not r.met_target]
+
+    def test_memintensive_savings(self, homog):
+        """Fig. 14c: mem-intensive system energy savings ~7% at <5% loss."""
+        mem = [(n, c) for n, c in homog if c[0].memory_intensive]
+        runs = [voltron.run_controller(n, c, 5.0, n_intervals=6)
+                for n, c in mem]
+        savings = np.mean([r.system_energy_savings_pct for r in runs])
+        loss = np.mean([r.perf_loss_pct for r in runs])
+        assert 4.5 <= savings <= 10.0
+        assert loss <= 5.0
+
+    def test_target_sweep_fig18_shape(self, homog):
+        """Fig. 18: savings grow with the loss target, plateau, then
+        *decline* once the controller picks very low voltages whose runtime
+        stretch outweighs the DRAM savings (Section 6.7)."""
+        name, c = [x for x in homog if x[1][0].memory_intensive][0]
+        s = {t: voltron.run_controller(name, c, t, n_intervals=5)
+             .system_energy_savings_pct for t in (2.0, 5.0, 15.0)}
+        assert s[5.0] > s[2.0] - 0.3          # growth region
+        assert s[15.0] < s[5.0]               # decline past the plateau
+
+
+class TestMemDVFS:
+    def test_zero_effect_on_memintensive(self, homog):
+        """Section 6.3: MemDVFS cannot scale for memory-intensive loads."""
+        mem = [(n, c) for n, c in homog if c[0].memory_intensive]
+        for n, c in mem:
+            r = memdvfs.run(n, c, n_intervals=4)
+            assert (r.selected_rates == 1600.0).all()
+            assert abs(r.perf_loss_pct) < 0.1
+
+    def test_saves_on_nonmem(self, homog):
+        non = [(n, c) for n, c in homog if not c[0].memory_intensive]
+        savings = np.mean([memdvfs.run(n, c, n_intervals=4)
+                           .system_energy_savings_pct for n, c in non])
+        assert savings > 0.5
+
+    def test_voltron_beats_memdvfs_on_mem(self, homog):
+        mem = [(n, c) for n, c in homog if c[0].memory_intensive]
+        v = np.mean([voltron.run_controller(n, c, 5.0, n_intervals=4)
+                     .system_energy_savings_pct for n, c in mem])
+        d = np.mean([memdvfs.run(n, c, n_intervals=4)
+                     .system_energy_savings_pct for n, c in mem])
+        assert v > d + 3.0
+
+
+class TestBankLocality:
+    def test_conservative_model(self):
+        assert bank_locality.slow_banks(1.35) == 0
+        assert bank_locality.slow_banks(1.25) == 2
+        assert bank_locality.slow_banks(0.90) == 8
+
+    def test_model_is_conservative_for_vendor_c(self):
+        for d in chips.by_vendor("C")[:3]:
+            assert bank_locality.conservative_model_is_conservative(d)
+
+    def test_bl_improves(self, homog):
+        """Fig. 16: +BL lowers loss and raises savings (2.9->1.8%,
+        7.0->7.3% in the paper)."""
+        mem = [(n, c) for n, c in homog if c[0].memory_intensive]
+        base = [voltron.run_controller(n, c, 5.0, n_intervals=5)
+                for n, c in mem]
+        bl = [voltron.run_controller(n, c, 5.0, n_intervals=5,
+                                     bank_locality=True) for n, c in mem]
+        assert (np.mean([r.perf_loss_pct for r in bl])
+                < np.mean([r.perf_loss_pct for r in base]))
+        assert (np.mean([r.system_energy_savings_pct for r in bl])
+                >= np.mean([r.system_energy_savings_pct for r in base]) - 0.2)
+
+
+def test_heterogeneous_suite_meets_target_on_average():
+    """Fig. 17: average loss within target per mix category."""
+    wls = workloads.heterogeneous_workloads()[:10]
+    runs = [voltron.run_controller(n, c, 5.0, n_intervals=4)
+            for n, c in wls]
+    assert np.mean([r.perf_loss_pct for r in runs]) <= 5.0
