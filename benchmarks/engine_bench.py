@@ -1,0 +1,51 @@
+"""Batched-engine throughput vs the scalar path.
+
+The acceptance benchmark for the engine refactor: the 216-sample
+``perf_model`` training sweep (27 workloads x 8 voltages) through the old
+per-sample scalar loop versus one batched jit-compiled call.  Reported
+batched time is steady-state (compile excluded — the jit cache amortizes it
+across every later sweep in the process).
+"""
+from __future__ import annotations
+
+import time
+
+
+def engine_sweep():
+    from repro import engine
+    from repro.core.perf_model import TRAIN_VOLTAGES
+    from repro.memsim import system, workloads
+
+    wls = workloads.homogeneous_workloads()
+
+    # scalar path: the pre-refactor per-sample loop over system.simulate
+    t0 = time.time()
+    for _, c in wls:
+        base = system.simulate_scalar(c)
+        for v in TRAIN_VOLTAGES:
+            pt = system.simulate_scalar(c, system.voltron_point(v))
+            _ = 100.0 * (1.0 - pt.ws / base.ws)
+    scalar_s = time.time() - t0
+
+    wb = engine.WorkloadBatch.from_workloads(wls)
+    pg = engine.PointGrid.from_voltages(TRAIN_VOLTAGES)
+    t0 = time.time()
+    engine.evaluate_batch(wb, pg)                       # compile + run
+    compile_s = time.time() - t0
+    reps = 5
+    t0 = time.time()
+    for _ in range(reps):
+        engine.evaluate_batch(wb, pg)
+    batched_s = (time.time() - t0) / reps
+    speedup = scalar_s / batched_s
+
+    n = len(wls) * len(TRAIN_VOLTAGES)
+    return [
+        ("engine/perf_model_sweep/scalar",
+         f"{scalar_s * 1e3:.0f}ms for {n} samples",
+         f"{scalar_s / n * 1e6:.0f}us/sample"),
+        ("engine/perf_model_sweep/batched",
+         f"{batched_s * 1e3:.1f}ms for {n} samples",
+         f"speedup={speedup:.0f}x (target >=10x) "
+         f"first_call={compile_s:.2f}s incl compile"),
+    ]

@@ -64,4 +64,24 @@ def kernels():
     rows.append(("kernel/voltage_inject/ref_cpu",
                  f"{t * 1e3:.1f}ms for {gb:.2f}GB touched",
                  f"tpu_roofline={gb * 1e9 / hw.TPU_HBM_BW * 1e6:.0f}us"))
+
+    from repro.kernels.sweep_solve import ops as ss
+    bb, cc, iters = 4096, 4, 25
+    ks = jax.random.split(jax.random.key(3), 4)
+    mpki = jax.random.uniform(ks[0], (bb, cc), minval=0.1, maxval=60.0)
+    ipcb = jax.random.uniform(ks[1], (bb, cc), minval=0.8, maxval=2.4)
+    mlp = jax.random.uniform(ks[2], (bb, cc), minval=1.0, maxval=5.0)
+    rh = jax.random.uniform(ks[3], (bb,), minval=0.4, maxval=0.9)
+    eb = jnp.full((bb,), 4.0)
+    wm = jnp.full((bb,), 1.3)
+    tns = jnp.full((bb,), 13.75)
+    tr = jnp.full((bb,), 5.0)
+    pk = jnp.full((bb,), 25.6)
+    h = jax.jit(lambda *xs: ss.solve(*xs, impl="reference")["ipc"])
+    t = _time(h, mpki, ipcb, mlp, rh, eb, wm, tns, tns, tns * 2.5, tr, pk)
+    # ~40 vector ops per damped iteration over the [B, C] batch
+    fl = bb * cc * iters * 40
+    rows.append(("kernel/sweep_solve/ref_cpu",
+                 f"{t * 1e3:.1f}ms for {bb} samples x {iters} iters",
+                 f"tpu_roofline={fl / hw.TPU_PEAK_FLOPS_BF16 * 1e6:.2f}us"))
     return rows

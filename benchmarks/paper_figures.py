@@ -140,18 +140,23 @@ def table3_latencies():
 
 
 def fig13_table5_array_scaling():
-    from repro.memsim import system, workloads
+    """The whole (group x voltage) grid in two batched engine calls."""
+    from repro import engine
+    from repro.memsim import workloads
     rows = []
     homog = workloads.homogeneous_workloads()
-    groups = {"mem": [c for _, c in homog if c[0].memory_intensive],
-              "non": [c for _, c in homog if not c[0].memory_intensive]}
+    voltages = (1.3, 1.2, 1.1, 1.0, 0.9)
+    pg = engine.PointGrid.from_voltages(voltages)
+    groups = {"mem": [w for w in homog if w[1][0].memory_intensive],
+              "non": [w for w in homog if not w[1][0].memory_intensive]}
     targets = {("non", 1.2): (1.4, 10.4, 2.5), ("non", 0.9): (14.2, 29.0, 2.9)}
-    for v in (1.3, 1.2, 1.1, 1.0, 0.9):
-        for g, cs in groups.items():
-            res = [system.evaluate(c, system.voltron_point(v)) for c in cs]
-            loss = np.mean([r.perf_loss_pct for r in res])
-            dp = np.mean([r.dram_power_savings_pct for r in res])
-            se = np.mean([r.system_energy_savings_pct for r in res])
+    for g, wls in groups.items():
+        cmp_ = engine.evaluate_batch(
+            engine.WorkloadBatch.from_workloads(wls), pg)     # [W, V]
+        for vi, v in enumerate(voltages):
+            loss = cmp_.perf_loss_pct[:, vi].mean()
+            dp = cmp_.dram_power_savings_pct[:, vi].mean()
+            se = cmp_.system_energy_savings_pct[:, vi].mean()
             t = targets.get((g, v))
             rows.append((f"fig13_table5/{g}/V={v}",
                          f"loss={loss:.1f}% dramP={dp:.1f}% sysE={se:.1f}%",
@@ -166,8 +171,7 @@ def fig14_15_voltron_vs_memdvfs():
     homog = workloads.homogeneous_workloads()
     for label, sel in (("non", False), ("mem", True)):
         grp = [(n, c) for n, c in homog if c[0].memory_intensive == sel]
-        vr = [voltron.run_controller(n, c, 5.0, n_intervals=6)
-              for n, c in grp]
+        vr = voltron.run_suite(grp, 5.0, n_intervals=6)
         dr = [memdvfs.run(n, c, n_intervals=6) for n, c in grp]
         rows.append((
             f"fig14/voltron/{label}",
@@ -192,9 +196,8 @@ def fig16_bank_locality():
     from repro.memsim import workloads
     homog = workloads.homogeneous_workloads()
     mem = [(n, c) for n, c in homog if c[0].memory_intensive]
-    base = [voltron.run_controller(n, c, 5.0, n_intervals=6) for n, c in mem]
-    bl = [voltron.run_controller(n, c, 5.0, n_intervals=6,
-                                 bank_locality=True) for n, c in mem]
+    base = voltron.run_suite(mem, 5.0, n_intervals=6)
+    bl = voltron.run_suite(mem, 5.0, n_intervals=6, bank_locality=True)
     return [
         ("fig16/voltron",
          f"loss={np.mean([r.perf_loss_pct for r in base]):.1f}%",
@@ -216,8 +219,7 @@ def fig17_heterogeneous():
         cat = n.split("-")[1]
         by_cat.setdefault(cat, []).append((n, c))
     for cat, grp in sorted(by_cat.items()):
-        runs = [voltron.run_controller(n, c, 5.0, n_intervals=4)
-                for n, c in grp[:4]]
+        runs = voltron.run_suite(grp[:4], 5.0, n_intervals=4)
         rows.append((f"fig17/{cat}",
                      f"loss={np.mean([r.perf_loss_pct for r in runs]):.1f}%",
                      f"ppw={np.mean([r.perf_per_watt_gain_pct for r in runs]):.1f}%"))
@@ -231,8 +233,7 @@ def fig18_target_sweep():
     mem = [(n, c) for n, c in homog if c[0].memory_intensive][:4]
     rows = []
     for target in (1.0, 2.5, 5.0, 7.5, 10.0, 15.0):
-        runs = [voltron.run_controller(n, c, target, n_intervals=4)
-                for n, c in mem]
+        runs = voltron.run_suite(mem, target, n_intervals=4)
         rows.append((f"fig18/target={target}%",
                      f"loss={np.mean([r.perf_loss_pct for r in runs]):.1f}%",
                      f"sysE={np.mean([r.system_energy_savings_pct for r in runs]):.1f}%"))
@@ -246,10 +247,9 @@ def fig19_interval_sweep():
     mem = [(n, c) for n, c in homog if c[0].memory_intensive][:4]
     rows = []
     for interval in (1_000_000, 4_000_000, 16_000_000, 64_000_000):
-        runs = [voltron.run_controller(n, c, 5.0, n_intervals=8,
-                                       interval_cycles=interval,
-                                       phase_amplitude=0.35)
-                for n, c in mem]
+        runs = voltron.run_suite(mem, 5.0, n_intervals=8,
+                                 interval_cycles=interval,
+                                 phase_amplitude=0.35)
         rows.append((f"fig19/interval={interval // 1_000_000}M",
                      f"ppw={np.mean([r.perf_per_watt_gain_pct for r in runs]):.2f}%",
                      f"sysE={np.mean([r.system_energy_savings_pct for r in runs]):.2f}%"))

@@ -14,9 +14,11 @@ import time
 
 
 def main() -> None:
-    from benchmarks import kernel_bench, paper_figures, roofline_report
+    from benchmarks import (engine_bench, kernel_bench, paper_figures,
+                            roofline_report)
     pattern = sys.argv[1] if len(sys.argv) > 1 else ""
-    fns = list(paper_figures.ALL) + [kernel_bench.kernels,
+    fns = list(paper_figures.ALL) + [engine_bench.engine_sweep,
+                                     kernel_bench.kernels,
                                      roofline_report.roofline]
     print("name,us_per_call,derived")
     failures = 0

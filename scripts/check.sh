@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# One-step verification: tier-1 test suite + a fast benchmark smoke.
+#   scripts/check.sh            # everything
+#   scripts/check.sh -m 'not slow'   # extra pytest args pass through
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pytest -x -q "$@"
+
+# fast smoke: the Voltron-vs-MemDVFS controller figure through the batched
+# engine (run.py exits nonzero if the figure function fails)
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run fig14

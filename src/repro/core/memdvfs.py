@@ -58,28 +58,33 @@ def select_rate(demand_util_at_1600: float) -> float:
 
 
 def run(name: str, cores: tuple, n_intervals: int = 25) -> MemDVFSRun:
-    rate = 1600.0
-    base_ws = pt_ws = 0.0
-    pt_dp = base_se = pt_se = base_dp = 0.0
-    base_pw = pt_pw = 0.0
-    chosen = []
-    for _ in range(n_intervals):
-        base = system.simulate(cores)
-        pt = system.simulate(cores, system.memdvfs_point(rate))
-        base_ws += base.ws
-        pt_ws += pt.ws
-        base_dp += base.power.dram_w
-        pt_dp += pt.power.dram_w
-        base_se += base.energy_j["system"]
-        pt_se += pt.energy_j["system"]
-        base_pw += base.power.system_w
-        pt_pw += pt.power.system_w
-        # profile the *demand* (utilization at full rate), not the post-
-        # throttle utilization — otherwise a downclock self-justifies
-        rate = select_rate(demand_utilization(cores))
-        chosen.append(rate)
+    """MemDVFS interval loop via the batched engine.
+
+    The fixed-threshold policy profiles the workload's *demand* (its
+    utilization at full rate, not the post-throttle utilization — otherwise
+    a downclock self-justifies), which is interval-invariant here: interval
+    0 runs at 1600 MT/s, every later interval at the selected rate.  That
+    collapses the Python loop into one three-point engine call (baseline,
+    1600, selected) plus closed-form interval sums.
+    """
+    from repro import engine
+    rate = select_rate(demand_utilization(cores))
+    wb = engine.WorkloadBatch.from_workloads([(name, cores)])
+    pg = engine.PointGrid.from_points([system.NOMINAL,
+                                       system.memdvfs_point(1600.0),
+                                       system.memdvfs_point(rate)])
+    r = engine.simulate_batch(wb, pg)
+    n = n_intervals
+    first_then_rest = lambda a: a[0, 1] + (n - 1) * a[0, 2]
+    base_ws, pt_ws = n * r.ws[0, 0], first_then_rest(r.ws)
+    base_dp = n * r.power["dram_w"][0, 0]
+    pt_dp = first_then_rest(r.power["dram_w"])
+    base_se = n * r.energy["system_j"][0, 0]
+    pt_se = first_then_rest(r.energy["system_j"])
+    base_pw = n * r.power["system_w"][0, 0]
+    pt_pw = first_then_rest(r.power["system_w"])
     loss = 100.0 * (1.0 - pt_ws / base_ws)
-    return MemDVFSRun(name, np.asarray(chosen), loss,
+    return MemDVFSRun(name, np.full(n, rate), loss,
                       100.0 * (1.0 - pt_dp / base_dp),
                       100.0 * (1.0 - pt_se / base_se),
                       100.0 * ((pt_ws / pt_pw) / (base_ws / base_pw) - 1.0))

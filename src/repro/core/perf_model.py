@@ -20,7 +20,7 @@ import functools
 import numpy as np
 
 from repro.dram import circuit
-from repro.memsim import system, workloads
+from repro.memsim import workloads
 from repro.memsim.workloads import MEM_INTENSIVE_MPKI
 
 # 8 evaluated voltage levels (216 = 27 x 8 samples, Section 5.2)
@@ -53,17 +53,28 @@ class PiecewiseLinearModel:
 
 
 def _dataset():
-    """(latency, mpki, stall_frac, loss_pct) over 27 workloads x 8 levels."""
-    rows = []
-    for name, cores in workloads.homogeneous_workloads():
-        base = system.simulate(cores)
-        mpki = cores[0].mpki
-        stall = float(np.mean(base.stall_frac))
-        for v in TRAIN_VOLTAGES:
-            cmp_ = system.evaluate(cores, system.voltron_point(v))
-            rows.append((latency_feature(v), mpki, stall,
-                         cmp_.perf_loss_pct))
-    return np.asarray(rows)
+    """(latency, mpki, stall_frac, loss_pct) over 27 workloads x 8 levels.
+
+    All 216 training samples come from two batched engine calls (baseline
+    grid + the 27x8 voltage grid) — no per-sample Python loop.  Row order
+    (workload-major, voltage-minor) matches the original scalar sweep so
+    the train/test permutation is unchanged.
+    """
+    from repro import engine
+    wls = workloads.homogeneous_workloads()
+    wb = engine.WorkloadBatch.from_workloads(wls)
+    base = engine.simulate_batch(wb, engine.PointGrid.nominal())
+    stall = base.stall_frac[:, 0, :].mean(axis=-1)               # [W]
+    cmp_ = engine.evaluate_batch(
+        wb, engine.PointGrid.from_voltages(TRAIN_VOLTAGES))      # [W, V]
+    t3 = circuit.timings_for_voltages(TRAIN_VOLTAGES)
+    lat = t3[:, 1] + t3[:, 2]                                    # tRP + tRAS
+    w, v = cmp_.perf_loss_pct.shape
+    rows = np.stack([np.repeat(lat[None, :], w, axis=0),
+                     np.repeat(wb.mpki[:, :1], v, axis=1),
+                     np.repeat(stall[:, None], v, axis=1),
+                     cmp_.perf_loss_pct], axis=-1)
+    return rows.reshape(w * v, 4)
 
 
 def _ols(x: np.ndarray, y: np.ndarray):

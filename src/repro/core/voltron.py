@@ -12,18 +12,23 @@ Two components:
    voltage with the piecewise-linear model and select the smallest
    ``V_array`` whose predicted loss stays within the user target.
 
-``run_controller`` executes the interval loop against the memsim substrate,
-including optional workload phase variation (which is what makes the
-profile-interval length matter — Fig. 19).
+The interval loop runs on the batched engine: ``run_suite`` executes *all*
+workloads' controllers in one ``lax.scan`` (`repro.engine.controller`),
+including workload phase variation (which is what makes the
+profile-interval length matter — Fig. 19).  ``run_controller`` is the
+single-workload wrapper; ``impl="scalar"`` keeps the original Python loop
+as the parity reference.
 """
 from __future__ import annotations
 
 import dataclasses
+import zlib
 
 import numpy as np
 
 from repro import hw
 from repro.core import perf_model
+from repro.dram import circuit
 from repro.memsim import system, workloads
 
 # Algorithm 1 candidates: every 0.05 V from 0.90 to 1.30; 1.35 is the
@@ -69,6 +74,64 @@ def _phase_factors(n_intervals: int, seed: int, phase_len: int = 5,
     return np.repeat(factors, phase_len)[:n_intervals]
 
 
+def _phase_matrix(names, n_intervals: int, interval_cycles: int,
+                  phase_seed, phase_amplitude: float) -> np.ndarray:
+    """[T, W] per-interval memory-intensity factors, one column per
+    workload (seeded by name unless an explicit seed is given)."""
+    phase_len_cycles = 5 * DEFAULT_INTERVAL_CYCLES
+    phase_len = max(1, int(round(phase_len_cycles / interval_cycles)))
+    cols = []
+    for name in names:
+        seed = (zlib.crc32(name.encode()) if phase_seed is None
+                else phase_seed)
+        cols.append(_phase_factors(n_intervals, seed, phase_len,
+                                   phase_amplitude))
+    return np.stack(cols, axis=1)
+
+
+def _candidate_grid(bank_locality: bool):
+    """Resolved timings for the 9 candidates + the 1.35 V fallback, plus
+    the (unblended) Algorithm-1 latency features of the candidates."""
+    from repro import engine
+    from repro.core import bank_locality as bl
+    cand_v = np.array(CANDIDATE_VOLTAGES + [hw.VDD_NOMINAL])
+    fbf = (np.array([bl.fast_bank_fraction(v) for v in cand_v])
+           if bank_locality else 0.0)
+    grid = engine.PointGrid.from_voltages(cand_v, fbf)
+    timings = np.stack([grid.t_rcd, grid.t_rp, grid.t_ras], axis=-1)
+    # Algorithm 1 predicts from the plain Table 3 latency at each candidate
+    # (the controller does not know the per-bank blend).
+    t3 = circuit.timings_for_voltages(CANDIDATE_VOLTAGES)
+    lat_feat = t3[:, 1] + t3[:, 2]                       # tRP + tRAS
+    return cand_v, lat_feat, timings
+
+
+def run_suite(wls, target_loss_pct: float = DEFAULT_TARGET_PCT,
+              n_intervals: int = 25,
+              interval_cycles: int = DEFAULT_INTERVAL_CYCLES,
+              model: perf_model.PiecewiseLinearModel | None = None,
+              bank_locality: bool = False,
+              phase_seed: int | None = None,
+              phase_amplitude: float = 0.15) -> list:
+    """Run the Voltron interval loop for every workload in ``wls`` — one
+    batched ``lax.scan`` over intervals, vectorized over workloads."""
+    from repro import engine
+    model = model or perf_model.fit()
+    wb = engine.WorkloadBatch.from_workloads(wls)
+    phases = _phase_matrix(wb.names, n_intervals, interval_cycles,
+                           phase_seed, phase_amplitude)
+    cand_v, lat_feat, timings = _candidate_grid(bank_locality)
+    res = engine.run_batched(wb, phases, model.coef_low, model.coef_high,
+                             target_loss_pct, cand_v, lat_feat, timings)
+    return [ControllerRun(
+        res.names[w], target_loss_pct, res.selected_voltages[w],
+        res.perf_loss_pct[w], res.dram_power_savings_pct[w],
+        res.dram_energy_savings_pct[w], res.system_energy_savings_pct[w],
+        res.perf_per_watt_gain_pct[w],
+        met_target=res.perf_loss_pct[w] <= target_loss_pct + 1e-9)
+        for w in range(wb.n_workloads)]
+
+
 def run_controller(name: str, cores: tuple,
                    target_loss_pct: float = DEFAULT_TARGET_PCT,
                    n_intervals: int = 25,
@@ -76,7 +139,8 @@ def run_controller(name: str, cores: tuple,
                    model: perf_model.PiecewiseLinearModel | None = None,
                    bank_locality: bool = False,
                    phase_seed: int | None = None,
-                   phase_amplitude: float = 0.15) -> ControllerRun:
+                   phase_amplitude: float = 0.15,
+                   impl: str = "engine") -> ControllerRun:
     """Execute Voltron's interval loop on one multiprogrammed workload.
 
     Each interval: profile (MPKI, stall fraction) under the *current*
@@ -87,13 +151,28 @@ def run_controller(name: str, cores: tuple,
     ``interval_cycles`` scales how many intervals a phase spans: longer
     intervals react more slowly to phase changes (Fig. 19).
     """
+    if impl == "engine":
+        return run_suite([(name, cores)], target_loss_pct, n_intervals,
+                         interval_cycles, model, bank_locality, phase_seed,
+                         phase_amplitude)[0]
+    if impl != "scalar":
+        raise ValueError(f"unknown impl {impl!r}")
+    return _run_controller_scalar(name, cores, target_loss_pct, n_intervals,
+                                  interval_cycles, model, bank_locality,
+                                  phase_seed, phase_amplitude)
+
+
+def _run_controller_scalar(name, cores, target_loss_pct, n_intervals,
+                           interval_cycles, model, bank_locality,
+                           phase_seed, phase_amplitude) -> ControllerRun:
+    """The original per-interval Python loop over the scalar simulator —
+    the engine's parity reference (tests/test_engine.py)."""
     model = model or perf_model.fit()
     import dataclasses as dc
 
     phase_len_cycles = 5 * DEFAULT_INTERVAL_CYCLES
     phase_len = max(1, int(round(phase_len_cycles / interval_cycles)))
     if phase_seed is None:
-        import zlib
         phase_seed = zlib.crc32(name.encode())    # deterministic across runs
     phases = _phase_factors(n_intervals, phase_seed, phase_len,
                             phase_amplitude)
@@ -106,8 +185,8 @@ def run_controller(name: str, cores: tuple,
         f = phases[i]
         ph_cores = tuple(dc.replace(b, mpki=b.mpki * f) for b in cores)
         op = _operating_point(v, bank_locality)
-        base = system.simulate(ph_cores)
-        pt = system.simulate(ph_cores, op)
+        base = system.simulate_scalar(ph_cores)
+        pt = system.simulate_scalar(ph_cores, op)
         base_ws += base.ws
         pt_ws += pt.ws
         base_dram_e += base.energy_j["dram"]
@@ -145,10 +224,9 @@ def evaluate_suite(target_loss_pct: float = DEFAULT_TARGET_PCT,
                    heterogeneous: bool = False,
                    bank_locality: bool = False,
                    n_intervals: int = 25) -> list:
-    """Run the controller over the paper's workload suite (Fig. 14 / 17)."""
+    """Run the controller over the paper's workload suite (Fig. 14 / 17) —
+    all workloads batched through one engine scan."""
     wls = (workloads.heterogeneous_workloads() if heterogeneous
            else workloads.homogeneous_workloads())
-    return [run_controller(n, c, target_loss_pct,
-                           bank_locality=bank_locality,
-                           n_intervals=n_intervals)
-            for n, c in wls]
+    return run_suite(wls, target_loss_pct, n_intervals,
+                     bank_locality=bank_locality)

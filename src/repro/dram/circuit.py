@@ -118,6 +118,14 @@ def timing_for_voltage(v_array: float) -> timing.TimingParams:
                                float(t["ras"][0]))
 
 
+def timings_for_voltages(v_array) -> np.ndarray:
+    """Vectorized ``timing_for_voltage``: float64[N, 3] of (tRCD, tRP, tRAS)
+    for an array of voltages — the batched engine resolves whole candidate
+    grids through this in one shot instead of one scalar call per point."""
+    t = table3(np.asarray(v_array, dtype=np.float64))
+    return np.stack([t["rcd"], t["rp"], t["ras"]], axis=-1)
+
+
 # --------------------------------------------------------------------------
 # Vendor / temperature / process-variation adjustments (Figs. 6, 10)
 # --------------------------------------------------------------------------

@@ -1,0 +1,38 @@
+"""Batched, jit-compiled simulation engine for the paper's design-space
+sweeps.
+
+Every result in the paper (Figs. 12-19, Table 5) is a sweep over
+(workload, V_array, profiling interval).  The scalar pipeline ran each
+operating point through Python one at a time; this package runs the whole
+grid as struct-of-arrays JAX computation.
+
+Batching axes
+=============
+
+- **W** — workloads (``WorkloadBatch``: stacked Table 4 benchmark features,
+  C cores each).
+- **P** — DRAM operating points (``PointGrid``: stacked ``OperatingPoint``
+  voltages/rates with timings resolved via the vectorized circuit model).
+- **T** — Voltron profiling intervals, scanned (``controller.run_batched``
+  carries the selected voltage per workload through one ``lax.scan``).
+
+``simulate_batch``/``evaluate_batch`` flatten W x P into one batch axis and
+dispatch the damped fixed-point CPI solve to ``repro.kernels.sweep_solve``
+(pure-jnp oracle off-TPU, Pallas kernel on TPU), then finish with
+vectorized weighted-speedup / power / energy math.
+
+Scalar-wrapper compatibility
+============================
+
+The legacy entry points survive as thin wrappers: ``memsim.system.simulate``
+and ``evaluate`` call the engine with W=P=1 (the original NumPy path is kept
+as ``system.simulate_scalar`` and is what the parity tests compare against),
+and ``core.voltron.run_controller`` is ``run_suite`` with one workload.
+Results match the scalar path to float32 tolerance; shapes and dataclass
+fields are unchanged.
+"""
+from repro.engine.batch import PointGrid, WorkloadBatch  # noqa: F401
+from repro.engine.controller import (ControllerBatchResult,  # noqa: F401
+                                     run_batched)
+from repro.engine.solve import (BatchResult, ComparisonBatch,  # noqa: F401
+                                evaluate_batch, simulate_batch)

@@ -1,0 +1,166 @@
+"""Struct-of-arrays containers for the batched simulation engine.
+
+``WorkloadBatch`` stacks the Table 4 benchmark features of W multiprogrammed
+C-core workloads; ``PointGrid`` stacks P DRAM operating points with their
+timings resolved up front through the vectorized circuit model
+(:func:`repro.dram.circuit.timings_for_voltages`).  Both are plain NumPy at
+construction time — the engine converts to jnp when it enters jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro import hw
+from repro.dram import circuit
+from repro.memsim.core import MLP_SCALE
+from repro.memsim.dram_timing import ChannelConfig
+
+N_BANKS = float(ChannelConfig().n_banks)
+
+
+def _blend_fast_banks(t: np.ndarray, fbf: np.ndarray) -> np.ndarray:
+    """Voltron+BL: error-free banks keep the nominal-voltage latencies;
+    blend per the access distribution (uniform banks) — the vectorized form
+    of OperatingPoint.resolve_timing's fast_bank_frac branch."""
+    if not (fbf > 0.0).any():
+        return t
+    std = circuit.timings_for_voltages([hw.VDD_NOMINAL])[0]
+    return fbf[:, None] * std + (1.0 - fbf[:, None]) * t
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadBatch:
+    """W workloads x C cores of benchmark features, one array per field."""
+
+    names: tuple
+    mpki: np.ndarray             # [W, C]
+    ipc_base: np.ndarray         # [W, C]
+    row_hit_core: np.ndarray     # [W, C] per-core row-buffer hit rate
+    bank_par_core: np.ndarray    # [W, C] per-core bank parallelism
+    write_frac_core: np.ndarray  # [W, C]
+
+    @classmethod
+    def from_workloads(cls, pairs) -> "WorkloadBatch":
+        """Build from ``[(name, (Benchmark, ...)), ...]`` (the format of
+        ``workloads.homogeneous_workloads`` / ``heterogeneous_workloads``)."""
+        names, cores = zip(*pairs)
+        field = lambda attr: np.array(
+            [[getattr(b, attr) for b in cs] for cs in cores], np.float64)
+        return cls(tuple(names), field("mpki"), field("ipc_base"),
+                   field("row_hit_rate"), field("bank_parallelism"),
+                   field("write_frac"))
+
+    @property
+    def n_workloads(self) -> int:
+        return self.mpki.shape[0]
+
+    @property
+    def n_cores(self) -> int:
+        return self.mpki.shape[1]
+
+    # -- shared-system features (the scalar path averages over cores) -------
+    @property
+    def mlp(self) -> np.ndarray:                                   # [W, C]
+        return 1.0 + np.maximum(0.0, self.bank_par_core - 1.0) * MLP_SCALE
+
+    @property
+    def row_hit(self) -> np.ndarray:                               # [W]
+        return self.row_hit_core.mean(axis=-1)
+
+    @property
+    def eff_banks(self) -> np.ndarray:                             # [W]
+        return np.minimum(self.bank_par_core.mean(axis=-1), N_BANKS)
+
+    @property
+    def write_mult(self) -> np.ndarray:                            # [W]
+        return 1.0 + self.write_frac_core.mean(axis=-1)
+
+    # -- alone-run features (each core simulated by itself, C=1) ------------
+    @property
+    def alone_eff_banks(self) -> np.ndarray:                       # [W, C]
+        return np.minimum(self.bank_par_core, N_BANKS)
+
+    @property
+    def alone_write_mult(self) -> np.ndarray:                      # [W, C]
+        return 1.0 + self.write_frac_core
+
+
+@dataclasses.dataclass(frozen=True)
+class PointGrid:
+    """P operating points with circuit-resolved timings, one array each."""
+
+    v_array: np.ndarray          # [P]
+    v_periph: np.ndarray         # [P]
+    data_rate_mts: np.ndarray    # [P]
+    fast_bank_frac: np.ndarray   # [P]
+    t_rcd: np.ndarray            # [P] ns
+    t_rp: np.ndarray             # [P] ns
+    t_ras: np.ndarray            # [P] ns
+
+    @classmethod
+    def from_points(cls, points) -> "PointGrid":
+        """Stack ``OperatingPoint``-like objects (duck-typed: ``v_array``,
+        ``v_periph``, ``data_rate_mts``, ``timing``, ``fast_bank_frac``).
+        Points without an explicit ``timing`` are resolved in one vectorized
+        circuit-model call."""
+        points = list(points)
+        p = len(points)
+        v_arr = np.array([pt.v_array for pt in points])
+        fbf = np.array([getattr(pt, "fast_bank_frac", 0.0) for pt in points])
+        t = np.zeros((p, 3))
+        unresolved = [i for i, pt in enumerate(points) if pt.timing is None]
+        if unresolved:
+            t[unresolved] = circuit.timings_for_voltages(v_arr[unresolved])
+        for i, pt in enumerate(points):
+            if pt.timing is not None:
+                t[i] = (pt.timing.t_rcd, pt.timing.t_rp, pt.timing.t_ras)
+        # As in OperatingPoint.resolve_timing, an explicit timing wins
+        # outright — only circuit-resolved points participate in the blend.
+        t = _blend_fast_banks(
+            t, fbf * np.array([pt.timing is None for pt in points]))
+        return cls(v_arr, np.array([pt.v_periph for pt in points]),
+                   np.array([float(pt.data_rate_mts) for pt in points]),
+                   fbf, t[:, 0], t[:, 1], t[:, 2])
+
+    @classmethod
+    def from_voltages(cls, v_array, fast_bank_frac=0.0) -> "PointGrid":
+        """Voltron-style grid: array voltage scales, peripheral rail and
+        channel rate stay nominal; timings from the circuit model."""
+        v = np.atleast_1d(np.asarray(v_array, np.float64))
+        fbf = np.broadcast_to(np.asarray(fast_bank_frac, np.float64),
+                              v.shape).copy()
+        t = _blend_fast_banks(circuit.timings_for_voltages(v), fbf)
+        return cls(v, np.full_like(v, hw.VDD_NOMINAL),
+                   np.full_like(v, 1600.0), fbf, t[:, 0], t[:, 1], t[:, 2])
+
+    @classmethod
+    def nominal(cls) -> "PointGrid":
+        """The single baseline point: 1.35 V, 1600 MT/s, *standard* DDR3L
+        timings (Table 2) — not the guardbanded Table 3 values."""
+        one = np.ones(1)
+        return cls(one * hw.VDD_NOMINAL, one * hw.VDD_NOMINAL, one * 1600.0,
+                   one * 0.0, one * hw.T_RCD_STD, one * hw.T_RP_STD,
+                   one * hw.T_RAS_STD)
+
+    @property
+    def n_points(self) -> int:
+        return self.v_array.shape[0]
+
+    @property
+    def freq_ratio(self) -> np.ndarray:
+        return self.data_rate_mts / 1600.0
+
+    @property
+    def clk_ns(self) -> np.ndarray:
+        return 2000.0 / self.data_rate_mts
+
+    @property
+    def transfer_ns(self) -> np.ndarray:
+        return 4.0 * self.clk_ns
+
+    @property
+    def peak_bw_gbps(self) -> np.ndarray:
+        n_channels = ChannelConfig().n_channels
+        return self.data_rate_mts * 1e6 * 8 * n_channels / 1e9

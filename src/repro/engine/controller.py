@@ -1,0 +1,168 @@
+"""Voltron's interval loop as a single ``lax.scan``, batched over workloads.
+
+The scalar controller (`repro.core.voltron.run_controller`) walks 25
+profiling intervals per workload in Python, simulating the baseline and the
+chosen operating point at every step.  Here the whole suite runs as one
+scan: the carried state is each workload's currently-selected candidate
+index (plus the running baseline/point accumulators), the scanned axis is
+the interval, and every per-interval simulation is a batched fixed-point
+solve over all W workloads at once.  Candidate timings are resolved up
+front into a [10]-entry table (9 Algorithm-1 candidates + the 1.35 V
+fallback) so voltage selection is a gather, and Algorithm 1 itself is an
+``argmax`` over the piecewise-linear loss predictions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine import solve as engine_solve
+from repro.engine.batch import WorkloadBatch
+from repro.kernels.sweep_solve import ops as sweep_ops
+from repro.memsim.workloads import MEM_INTENSIVE_MPKI
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerBatchResult:
+    names: tuple
+    selected_voltages: np.ndarray      # [W, T]
+    perf_loss_pct: np.ndarray          # [W]
+    dram_power_savings_pct: np.ndarray
+    dram_energy_savings_pct: np.ndarray
+    system_energy_savings_pct: np.ndarray
+    perf_per_watt_gain_pct: np.ndarray
+
+
+def _predict(coef_lo, coef_hi, lat, mpki, stall):
+    """Piecewise-linear Eq. 1 (jnp form of PiecewiseLinearModel.predict)."""
+    lat, mpki, stall = jnp.broadcast_arrays(lat, mpki, stall)
+    x = jnp.stack([jnp.ones_like(lat), lat, mpki, stall], axis=-1)
+    lo = x @ coef_lo
+    hi = x @ coef_hi
+    return jnp.where(mpki < MEM_INTENSIVE_MPKI, lo, hi)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def _controller_scan(feats, phases, coef_lo, coef_hi, target, cand_v,
+                     lat_feat, cand_t, impl: str = "reference"):
+    w, c = feats["mpki"].shape
+    nominal = {k: jnp.broadcast_to(v, (w,))
+               for k, v in engine_solve.NOMINAL_POINT.items()}
+
+    def shared_solve(mpki_t, t_rcd, t_rp, t_ras):
+        return sweep_ops.solve(
+            mpki_t, feats["ipc_base"], feats["mlp"], feats["row_hit"],
+            feats["eff_banks"], feats["write_mult"], t_rcd, t_rp, t_ras,
+            nominal["transfer_ns"], nominal["peak_bw_gbps"], impl=impl)
+
+    def metrics(out, alone, points):
+        ipc = out["ipc"]
+        ws = jnp.sum(ipc / alone, axis=-1)
+        runtime_s = jnp.max(engine_solve.INSTR_PER_CORE
+                            / (ipc * engine_solve.CPU_FREQ_HZ), axis=-1)
+        pe = engine_solve._power_energy(points, out["acts_per_ns"],
+                                        out["reads_per_ns"],
+                                        jnp.sum(ipc, axis=-1), runtime_s)
+        return ws, pe
+
+    def step(carry, f):
+        v_idx, sums = carry
+        mpki_t = feats["mpki"] * f[:, None]
+        alone = engine_solve.alone_solve(feats, mpki=mpki_t, impl=impl)
+        base = shared_solve(mpki_t, nominal["t_rcd"], nominal["t_rp"],
+                            nominal["t_ras"])
+        pt = shared_solve(mpki_t, cand_t["t_rcd"][v_idx],
+                          cand_t["t_rp"][v_idx], cand_t["t_ras"][v_idx])
+        base_ws, base_pe = metrics(base, alone, nominal)
+        ones = jnp.ones((w,), jnp.float32)
+        pt_points = {"v_array": cand_v[v_idx],
+                     "v_periph": nominal["v_periph"], "freq_ratio": ones}
+        pt_ws, pt_pe = metrics(pt, alone, pt_points)
+
+        sums = {
+            "base_ws": sums["base_ws"] + base_ws,
+            "pt_ws": sums["pt_ws"] + pt_ws,
+            "base_dram_e": sums["base_dram_e"] + base_pe["dram_j"],
+            "pt_dram_e": sums["pt_dram_e"] + pt_pe["dram_j"],
+            "base_sys_e": sums["base_sys_e"] + base_pe["system_j"],
+            "pt_sys_e": sums["pt_sys_e"] + pt_pe["system_j"],
+            "base_power": sums["base_power"] + base_pe["system_w"],
+            "pt_power": sums["pt_power"] + pt_pe["system_w"],
+            "base_dram_p": sums["base_dram_p"] + base_pe["dram_w"],
+            "pt_dram_p": sums["pt_dram_p"] + pt_pe["dram_w"],
+        }
+
+        # profile under the current operating point, then Algorithm 1:
+        # smallest candidate (ascending voltage) within the loss target,
+        # falling back to nominal when none qualifies.
+        mean_mpki = jnp.mean(mpki_t, axis=-1)
+        mean_stall = jnp.mean(pt["stall_frac"], axis=-1)
+        preds = _predict(coef_lo, coef_hi, lat_feat[None, :],
+                         mean_mpki[:, None], mean_stall[:, None])   # [W, 9]
+        ok = preds <= target
+        new_idx = jnp.where(ok.any(axis=-1),
+                            jnp.argmax(ok, axis=-1),
+                            jnp.full((w,), cand_v.shape[0] - 1))
+        new_idx = new_idx.astype(jnp.int32)
+        return (new_idx, sums), new_idx
+
+    zeros = jnp.zeros((w,), jnp.float32)
+    init_sums = {k: zeros for k in
+                 ("base_ws", "pt_ws", "base_dram_e", "pt_dram_e",
+                  "base_sys_e", "pt_sys_e", "base_power", "pt_power",
+                  "base_dram_p", "pt_dram_p")}
+    init_idx = jnp.full((w,), cand_v.shape[0] - 1, jnp.int32)   # start at nom
+    (_, s), chosen = jax.lax.scan(step, (init_idx, init_sums), phases)
+
+    return {
+        "selected_idx": chosen.T,                               # [W, T]
+        "perf_loss_pct": 100.0 * (1.0 - s["pt_ws"] / s["base_ws"]),
+        "dram_power_savings_pct":
+            100.0 * (1.0 - s["pt_dram_p"] / s["base_dram_p"]),
+        "dram_energy_savings_pct":
+            100.0 * (1.0 - s["pt_dram_e"] / s["base_dram_e"]),
+        "system_energy_savings_pct":
+            100.0 * (1.0 - s["pt_sys_e"] / s["base_sys_e"]),
+        "perf_per_watt_gain_pct":
+            100.0 * ((s["pt_ws"] / s["pt_power"])
+                     / (s["base_ws"] / s["base_power"]) - 1.0),
+    }
+
+
+def run_batched(wb: WorkloadBatch, phases: np.ndarray, coef_lo, coef_hi,
+                target_loss_pct: float, cand_v: np.ndarray,
+                lat_feat: np.ndarray, cand_timings: np.ndarray,
+                impl: str = "auto") -> ControllerBatchResult:
+    """Run the interval loop for all W workloads in one scan.
+
+    ``phases``: [T, W] per-interval memory-intensity factors.
+    ``cand_v``: [K] candidate voltages, ascending, last entry = fallback.
+    ``lat_feat``: [K-1] Algorithm-1 latency features of the candidates.
+    ``cand_timings``: [K, 3] resolved (tRCD, tRP, tRAS) per candidate.
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "reference"
+    f32 = lambda x: jnp.asarray(np.asarray(x), jnp.float32)
+    cand_t = {"t_rcd": f32(cand_timings[:, 0]),
+              "t_rp": f32(cand_timings[:, 1]),
+              "t_ras": f32(cand_timings[:, 2])}
+    out = _controller_scan(engine_solve._wb_feats(wb), f32(phases),
+                           f32(coef_lo), f32(coef_hi),
+                           jnp.float32(target_loss_pct), f32(cand_v),
+                           f32(lat_feat), cand_t, impl=impl)
+    a = {k: np.asarray(v, np.float64) for k, v in out.items()
+         if k != "selected_idx"}
+    # map indices back to the exact float64 candidate voltages so the
+    # selections compare bit-equal against the scalar controller
+    a["selected_voltages"] = \
+        np.asarray(cand_v, np.float64)[np.asarray(out["selected_idx"])]
+    return ControllerBatchResult(wb.names, a["selected_voltages"],
+                                 a["perf_loss_pct"],
+                                 a["dram_power_savings_pct"],
+                                 a["dram_energy_savings_pct"],
+                                 a["system_energy_savings_pct"],
+                                 a["perf_per_watt_gain_pct"])

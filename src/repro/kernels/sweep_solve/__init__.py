@@ -1,0 +1,8 @@
+"""Batched fixed-point latency/CPI solve for design-space sweeps.
+
+``ops.solve`` is the public entry point; it dispatches to the Pallas TPU
+kernel (``kernel.py``) or the pure-jnp oracle (``ref.py``).  The engine
+(`repro.engine`) flattens its (workload x operating-point) grids into the
+single batch axis this package consumes.
+"""
+from repro.kernels.sweep_solve.ops import solve  # noqa: F401

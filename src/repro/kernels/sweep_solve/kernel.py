@@ -1,0 +1,108 @@
+"""Pallas TPU kernel for the batched fixed-point latency/CPI inner loop.
+
+The design-space sweep (workloads x voltages x intervals) flattens into one
+batch axis B of independent fixed-point solves; each sample is tiny (C=4
+cores, ~20 scalar features) but the batch is large, so the kernel packs every
+sample into one 128-lane feature row and tiles the batch over the sublane
+axis: blocks of (8, 128) float32 — the native VPU tile — with the damped
+iteration as a ``fori_loop`` of pure vector ops entirely in VMEM.
+
+Feature row layout (see ``ops.pack_features``): per-core vectors first
+(mpki, ipc_base, mlp: C lanes each), then per-sample scalars (row_hit,
+eff_banks, write_mult, t_rcd, t_rp, t_ras, transfer_ns, peak_bw_gbps).
+Output row: lanes [0:C) = converged IPC, lane C = loaded latency (ns),
+lane C+1 = binding-resource utilization.
+
+On this container (CPU) the kernel is exercised in interpret mode; the
+numerical contract with ``ref.solve_ref`` is asserted by the parity tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro import hw
+from repro.kernels.sweep_solve.ref import N_CHANNELS
+from repro.memsim.core import (CONFLICT_FRAC, CPU_FREQ_GHZ, ROB_HIDE_CYCLES,
+                               STALL_AMPLIFY)
+
+ROW_BLOCK = 8        # batch samples per grid step (f32 sublane tile)
+LANES = 128          # feature lanes (one VPU register row)
+
+
+def _solve_kernel(c: int, iters: int, t_cl: float, feat_ref, out_ref):
+    f = feat_ref[...]
+    mpki = f[:, 0:c]
+    ipc_base = f[:, c:2 * c]
+    mlp = f[:, 2 * c:3 * c]
+    s = 3 * c
+    row_hit = f[:, s:s + 1]
+    eff_banks = f[:, s + 1:s + 2]
+    write_mult = f[:, s + 2:s + 3]
+    t_rcd = f[:, s + 3:s + 4]
+    t_rp = f[:, s + 4:s + 5]
+    t_ras = f[:, s + 5:s + 6]
+    transfer = f[:, s + 6:s + 7]
+    peak_bw = f[:, s + 7:s + 8]
+
+    miss = 1.0 - row_hit
+    t_rc = t_ras + t_rp
+    hit = t_cl + transfer
+    closed = t_rcd + t_cl + transfer
+    conflict = t_rp + t_rcd + t_cl + transfer
+    svc = row_hit * hit + miss * ((1.0 - CONFLICT_FRAC) * closed
+                                  + CONFLICT_FRAC * conflict)
+    bank_limit = (eff_banks / jnp.maximum(miss * t_rc, 1e-12)
+                  * hw.CACHE_LINE_BYTES * N_CHANNELS)
+    bw = jnp.where(miss > 0.0, jnp.minimum(peak_bw, bank_limit), peak_bw)
+    cpi_bw = (mpki / 1000.0) * hw.CACHE_LINE_BYTES / (bw / c) * CPU_FREQ_GHZ
+    bank_svc = miss * t_rc / eff_banks
+    queued_svc = jnp.maximum(jnp.maximum(transfer, bank_svc), 0.5 * svc)
+
+    def body(_, carry):
+        ipc, _, _ = carry
+        read_rate = jnp.sum(ipc * CPU_FREQ_GHZ * mpki / 1000.0,
+                            axis=1, keepdims=True)
+        req_rate = jnp.maximum(read_rate * write_mult, 1e-9)
+        rate_per_ch = req_rate / N_CHANNELS
+        util_bus = jnp.clip(rate_per_ch * transfer, 0.0, 0.999)
+        util_bank = jnp.clip(rate_per_ch * miss * t_rc / eff_banks,
+                             0.0, 0.999)
+        util = jnp.maximum(util_bus, util_bank)
+        wait = 0.5 * util / (1.0 - util) * queued_svc
+        loaded = svc + wait
+        stall_per_miss = (jnp.maximum(loaded * CPU_FREQ_GHZ
+                                      - ROB_HIDE_CYCLES, 0.0)
+                          * STALL_AMPLIFY / mlp)
+        cpi_lat = 1.0 / ipc_base + (mpki / 1000.0) * stall_per_miss
+        cpi = jnp.maximum(cpi_lat, cpi_bw)
+        return (0.5 * ipc + 0.5 / cpi, loaded, util)
+
+    zero = jnp.zeros_like(row_hit)
+    ipc, loaded, util = jax.lax.fori_loop(0, iters, body,
+                                          (ipc_base, zero, zero))
+    pad = jnp.zeros((f.shape[0], LANES - c - 2), f.dtype)
+    out_ref[...] = jnp.concatenate([ipc, loaded, util, pad], axis=1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_cores", "iters", "t_cl", "interpret"))
+def solve_pallas(feat, n_cores: int, iters: int = 25,
+                 t_cl: float = hw.T_CL_STD, *, interpret: bool = False):
+    """Run the packed fixed-point solve.  ``feat``: float32[B, 128] with B a
+    multiple of ROW_BLOCK.  Returns float32[B, 128] (see layout above)."""
+    b, lanes = feat.shape
+    if lanes != LANES or b % ROW_BLOCK:
+        raise ValueError(f"feat shape {(b, lanes)} must be "
+                         f"[k*{ROW_BLOCK}, {LANES}]")
+    return pl.pallas_call(
+        functools.partial(_solve_kernel, n_cores, iters, t_cl),
+        grid=(b // ROW_BLOCK,),
+        in_specs=[pl.BlockSpec((ROW_BLOCK, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((ROW_BLOCK, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, LANES), jnp.float32),
+        interpret=interpret,
+    )(feat)

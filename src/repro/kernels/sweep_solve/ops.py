@@ -1,0 +1,67 @@
+"""Public dispatch for the batched fixed-point sweep solve.
+
+``solve`` takes the struct-of-arrays sample batch (see ``ref.solve_ref`` for
+shapes/semantics) and dispatches to the pure-jnp oracle or the Pallas kernel.
+As with the other kernel packages, the oracle is the default off-TPU: the
+Pallas path exists for TPU deployment and is validated in interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import hw
+from repro.kernels.sweep_solve import kernel as _kernel
+from repro.kernels.sweep_solve import ref as _ref
+
+
+def pack_features(mpki, ipc_base, mlp, row_hit, eff_banks, write_mult,
+                  t_rcd, t_rp, t_ras, transfer_ns, peak_bw_gbps):
+    """Pack the SoA sample batch into the kernel's [B, 128] feature rows,
+    padding B up to the kernel's row block with benign (all-ones-ish) rows."""
+    per_core = [mpki, ipc_base, mlp]                     # [B, C] each
+    scalars = [row_hit, eff_banks, write_mult, t_rcd, t_rp, t_ras,
+               transfer_ns, peak_bw_gbps]                # [B] each
+    b, c = mpki.shape
+    cols = [jnp.asarray(x, jnp.float32) for x in per_core]
+    cols += [jnp.asarray(x, jnp.float32)[:, None] for x in scalars]
+    feat = jnp.concatenate(cols, axis=1)
+    feat = jnp.pad(feat, ((0, 0), (0, _kernel.LANES - feat.shape[1])))
+    pad_rows = (-b) % _kernel.ROW_BLOCK
+    if pad_rows:
+        benign = jnp.zeros((pad_rows, _kernel.LANES), jnp.float32)
+        benign = benign.at[:, c:3 * c].set(1.0)          # ipc_base, mlp = 1
+        benign = benign.at[:, 3 * c + 1].set(1.0)        # eff_banks = 1
+        benign = benign.at[:, 3 * c + 2].set(1.0)        # write_mult = 1
+        benign = benign.at[:, 3 * c + 3:3 * c + 6].set(13.75)  # timings
+        benign = benign.at[:, 3 * c + 6].set(5.0)        # transfer_ns
+        benign = benign.at[:, 3 * c + 7].set(25.6)       # peak_bw
+        feat = jnp.concatenate([feat, benign], axis=0)
+    return feat
+
+
+def solve(mpki, ipc_base, mlp, row_hit, eff_banks, write_mult,
+          t_rcd, t_rp, t_ras, transfer_ns, peak_bw_gbps,
+          t_cl: float = hw.T_CL_STD, iters: int = _ref.DEFAULT_ITERS,
+          impl: str = "auto"):
+    """Batched fixed-point CPI/latency solve.  Returns the dict documented
+    in ``ref.solve_ref``."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "reference"
+    if impl == "reference":
+        return _ref.solve_ref(mpki, ipc_base, mlp, row_hit, eff_banks,
+                              write_mult, t_rcd, t_rp, t_ras, transfer_ns,
+                              peak_bw_gbps, t_cl=t_cl, iters=iters)
+    if impl not in ("pallas", "pallas_interpret"):
+        raise ValueError(f"unknown impl {impl!r}")
+    b, c = mpki.shape
+    feat = pack_features(mpki, ipc_base, mlp, row_hit, eff_banks, write_mult,
+                         t_rcd, t_rp, t_ras, transfer_ns, peak_bw_gbps)
+    out = _kernel.solve_pallas(feat, c, iters, t_cl,
+                               interpret=(impl == "pallas_interpret"))
+    ipc = out[:b, 0:c]
+    loaded = out[:b, c]
+    util = out[:b, c + 1]
+    return _ref.finalize(ipc, loaded, util, jnp.asarray(mpki, jnp.float32),
+                         jnp.asarray(ipc_base, jnp.float32),
+                         jnp.asarray(row_hit, jnp.float32))

@@ -44,6 +44,8 @@ def _compile_costs(cfg, shape, mesh, policy):
     compiled = lowered.compile()
     t2 = time.time()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):          # older jax: [{...}]
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     coll = analyze.collective_bytes(hlo)
     mem = compiled.memory_analysis()

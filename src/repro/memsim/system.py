@@ -10,6 +10,12 @@ The operating point captures both mechanisms under study:
 ``evaluate`` returns performance loss (weighted-speedup based), DRAM power
 savings and system energy savings relative to the nominal baseline — the
 quantities plotted in Figs. 13-19 / Table 5.
+
+``simulate``/``evaluate`` are thin scalar wrappers over the batched engine
+(`repro.engine`): one workload x one operating point, memoized on a
+canonical key.  Sweeps should call ``engine.simulate_batch`` /
+``evaluate_batch`` directly; the original NumPy path survives as
+``simulate_scalar``/``evaluate_scalar`` for validation.
 """
 from __future__ import annotations
 
@@ -88,8 +94,9 @@ def _alone_ipc_nominal(b) -> float:
     return float(core_model.simulate_cores((b,), t, ch).ipc[0])
 
 
-@functools.lru_cache(maxsize=4096)
-def _simulate_cached(cores: tuple, op: OperatingPoint) -> SimResult:
+def simulate_scalar(cores: tuple, op: OperatingPoint = NOMINAL) -> SimResult:
+    """The original scalar NumPy path, kept as the engine's validation
+    reference (see tests/test_engine.py).  Uncached."""
     t = op.resolve_timing()
     ch = dram_timing.ChannelConfig(data_rate_mts=op.data_rate_mts)
     res = core_model.simulate_cores(cores, t, ch)
@@ -107,8 +114,52 @@ def _simulate_cached(cores: tuple, op: OperatingPoint) -> SimResult:
                      res.avg_latency_ns, res.bus_utilization)
 
 
+def _op_key(op: OperatingPoint) -> tuple:
+    """Canonical hashable key for an operating point.  An explicit
+    ``TimingParams`` is flattened to its field values so equal-but-distinct
+    instances (or points that merely *resolve* to the same timings) share
+    one cache entry — the old ``lru_cache`` keyed on the dataclass object
+    itself and relied on its identity-free hash staying in sync with every
+    field, a silent-miss hazard the engine cache avoids by construction."""
+    t = op.timing
+    return (op.v_array, op.v_periph, op.data_rate_mts, op.fast_bank_frac,
+            None if t is None else (t.t_rcd, t.t_rp, t.t_ras))
+
+
+_SIM_CACHE: dict = {}
+_SIM_CACHE_MAX = 8192
+
+
+def _simulate_engine(cores: tuple, op: OperatingPoint) -> SimResult:
+    """W=1, P=1 slice of the batched engine, reshaped into a SimResult."""
+    from repro import engine                 # deferred: engine imports us
+    wb = engine.WorkloadBatch.from_workloads([("", cores)])
+    pg = engine.PointGrid.from_points([op])
+    r = engine.simulate_batch(wb, pg)
+    pw = energy.PowerBreakdown(float(r.power["dram_dynamic_w"][0, 0]),
+                               float(r.power["dram_static_w"][0, 0]),
+                               float(r.power["cpu_w"][0, 0]))
+    en = {"cpu": float(r.energy["cpu_j"][0, 0]),
+          "dram_dynamic": float(r.energy["dram_dynamic_j"][0, 0]),
+          "dram_static": float(r.energy["dram_static_j"][0, 0]),
+          "dram": float(r.energy["dram_j"][0, 0]),
+          "system": float(r.energy["system_j"][0, 0])}
+    return SimResult(r.ipc[0, 0], float(r.ws[0, 0]),
+                     float(r.runtime_s[0, 0]), pw, en, r.stall_frac[0, 0],
+                     float(r.avg_latency_ns[0, 0]),
+                     float(r.bus_utilization[0, 0]))
+
+
 def simulate(cores: tuple, op: OperatingPoint = NOMINAL) -> SimResult:
-    return _simulate_cached(tuple(cores), op)
+    """Scalar-compatible wrapper over the batched engine (one workload, one
+    operating point), memoized on a canonical (cores, point) key."""
+    key = (tuple(cores), _op_key(op))
+    hit = _SIM_CACHE.get(key)
+    if hit is None:
+        if len(_SIM_CACHE) >= _SIM_CACHE_MAX:
+            _SIM_CACHE.clear()
+        hit = _SIM_CACHE[key] = _simulate_engine(tuple(cores), op)
+    return hit
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,10 +172,7 @@ class Comparison:
     cpu_energy_increase_pct: float
 
 
-def evaluate(cores: tuple, op: OperatingPoint,
-             base_op: OperatingPoint = NOMINAL) -> Comparison:
-    base = simulate(cores, base_op)
-    pt = simulate(cores, op)
+def _compare(base: SimResult, pt: SimResult) -> Comparison:
     loss = 1.0 - pt.ws / base.ws
     dram_power = 1.0 - pt.power.dram_w / base.power.dram_w
     dram_energy = 1.0 - pt.energy_j["dram"] / base.energy_j["dram"]
@@ -135,6 +183,18 @@ def evaluate(cores: tuple, op: OperatingPoint,
     return Comparison(100 * loss, 100 * dram_power, 100 * dram_energy,
                       100 * sys_energy, 100 * (ppw / ppw_base - 1.0),
                       100 * cpu_inc)
+
+
+def evaluate(cores: tuple, op: OperatingPoint,
+             base_op: OperatingPoint = NOMINAL) -> Comparison:
+    return _compare(simulate(cores, base_op), simulate(cores, op))
+
+
+def evaluate_scalar(cores: tuple, op: OperatingPoint,
+                    base_op: OperatingPoint = NOMINAL) -> Comparison:
+    """``evaluate`` through the scalar reference path (validation only)."""
+    return _compare(simulate_scalar(tuple(cores), base_op),
+                    simulate_scalar(tuple(cores), op))
 
 
 def voltron_point(v_array: float, fast_bank_frac: float = 0.0) -> OperatingPoint:

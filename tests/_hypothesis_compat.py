@@ -1,0 +1,83 @@
+"""Optional-dependency shim for ``hypothesis``.
+
+The property tests use a small slice of the hypothesis API (``given`` with
+keyword strategies, ``settings(max_examples=..., deadline=...)`` and the
+``floats`` / ``integers`` / ``sampled_from`` strategies).  When hypothesis is
+installed (the ``dev`` extra in pyproject.toml) we re-export the real thing;
+otherwise a deterministic mini-implementation runs each test over boundary
+values plus seeded-uniform samples, so the tier-1 suite collects and runs
+without the optional dependency.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+except ModuleNotFoundError:
+    import functools
+    import random
+    import zlib
+
+    class _Strategy:
+        """Deterministic stand-in: example(i, rng) -> i-th sample."""
+
+        def __init__(self, sampler):
+            self._sampler = sampler
+
+        def example_at(self, i, rng):
+            return self._sampler(i, rng)
+
+    class strategies:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            def sample(i, rng):
+                if i == 0:
+                    return float(min_value)
+                if i == 1:
+                    return float(max_value)
+                return rng.uniform(float(min_value), float(max_value))
+            return _Strategy(sample)
+
+        @staticmethod
+        def integers(min_value, max_value, **_kw):
+            def sample(i, rng):
+                if i == 0:
+                    return int(min_value)
+                if i == 1:
+                    return int(max_value)
+                return rng.randint(int(min_value), int(max_value))
+            return _Strategy(sample)
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+
+            def sample(i, rng):
+                if i < len(seq):
+                    return seq[i]
+                return seq[rng.randrange(len(seq))]
+            return _Strategy(sample)
+
+    def given(**strategy_kw):
+        def decorate(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", 10)
+                rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+                for i in range(n):
+                    drawn = {k: s.example_at(i, rng)
+                             for k, s in strategy_kw.items()}
+                    fn(*args, **drawn, **kwargs)
+            # pytest follows __wrapped__ to the original signature and would
+            # treat the strategy parameters as fixtures; hide it.
+            del wrapper.__wrapped__
+            # keep a settings() value applied beneath given() (wraps copies
+            # the inner function's __dict__); default only when absent
+            wrapper.__dict__.setdefault("_max_examples", 10)
+            return wrapper
+        return decorate
+
+    def settings(max_examples=10, **_kw):
+        def decorate(fn):
+            fn._max_examples = max_examples
+            return fn
+        return decorate

@@ -5,3 +5,6 @@ import sys
 # their own XLA_FLAGS); keep JAX quiet and deterministic.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# tests/ is not a package; make _hypothesis_compat importable regardless of
+# the pytest import mode in use.
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,7 +1,7 @@
 """Circuit model: Table 3 reproduction, waveforms, vendor/temperature."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.dram import circuit, timing
 

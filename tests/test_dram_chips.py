@@ -1,6 +1,6 @@
 """Chip-population model: Table 7 round-trip, Fig. 4/9/11 behaviors."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.dram import chips
 

@@ -1,0 +1,202 @@
+"""Batched engine vs the scalar reference path.
+
+The engine re-implements the scalar NumPy pipeline (``system.simulate_scalar``,
+``voltron`` impl="scalar") as float32 struct-of-arrays JAX; parity holds to
+f32 tolerance.  Percentages are compared with an absolute tolerance (they
+are differences of nearly-equal ratios), raw quantities relatively.
+"""
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import voltron
+from repro.kernels.sweep_solve import ops as sweep_ops
+from repro.memsim import system, workloads
+
+PCT_ATOL = 5e-3          # percentage points
+REL = 1e-4
+
+
+@pytest.fixture(scope="module")
+def homog():
+    return workloads.homogeneous_workloads()
+
+
+class TestConstruction:
+    def test_workload_batch_shapes(self, homog):
+        wb = engine.WorkloadBatch.from_workloads(homog)
+        w, c = len(homog), 4
+        assert (wb.n_workloads, wb.n_cores) == (w, c)
+        for arr in (wb.mpki, wb.ipc_base, wb.mlp, wb.row_hit_core,
+                    wb.bank_par_core, wb.write_frac_core):
+            assert arr.shape == (w, c) and arr.dtype == np.float64
+        for arr in (wb.row_hit, wb.eff_banks, wb.write_mult):
+            assert arr.shape == (w,)
+        assert wb.names == tuple(n for n, _ in homog)
+
+    def test_point_grid_from_points_matches_resolve_timing(self):
+        from repro.dram.timing import TimingParams
+        pts = [system.NOMINAL, system.voltron_point(1.1),
+               system.voltron_point(1.0, fast_bank_frac=0.5),
+               system.memdvfs_point(1066.0),
+               # explicit timing wins outright — no fast-bank blend
+               system.OperatingPoint(timing=TimingParams(10.0, 10.0, 30.0),
+                                     fast_bank_frac=0.5)]
+        pg = engine.PointGrid.from_points(pts)
+        assert pg.n_points == len(pts)
+        for i, pt in enumerate(pts):
+            t = pt.resolve_timing()
+            np.testing.assert_allclose(
+                [pg.t_rcd[i], pg.t_rp[i], pg.t_ras[i]],
+                [t.t_rcd, t.t_rp, t.t_ras], rtol=1e-12)
+            assert pg.freq_ratio[i] == pt.freq_ratio
+
+    def test_point_grid_from_voltages_vectorized(self):
+        from repro.dram import circuit
+        vs = [1.3, 1.15, 0.95]
+        pg = engine.PointGrid.from_voltages(vs)
+        for i, v in enumerate(vs):
+            t = circuit.timing_for_voltage(v)
+            assert (pg.t_rcd[i], pg.t_rp[i], pg.t_ras[i]) == \
+                (t.t_rcd, t.t_rp, t.t_ras)
+
+    def test_channel_properties(self):
+        pg = engine.PointGrid.from_points([system.memdvfs_point(1066.0)])
+        np.testing.assert_allclose(pg.transfer_ns, 4 * 2000.0 / 1066.0)
+        np.testing.assert_allclose(pg.peak_bw_gbps, 1066.0 * 1e6 * 8 * 2 / 1e9)
+
+
+class TestSimulateParity:
+    def test_grid_matches_scalar_simulate(self, homog):
+        wls = homog[::4]
+        pts = [system.NOMINAL, system.voltron_point(1.2),
+               system.voltron_point(1.0), system.voltron_point(0.9),
+               system.voltron_point(1.05, fast_bank_frac=0.25),
+               system.memdvfs_point(1333.0)]
+        wb = engine.WorkloadBatch.from_workloads(wls)
+        r = engine.simulate_batch(wb, engine.PointGrid.from_points(pts))
+        assert r.ipc.shape == (len(wls), len(pts), 4)
+        for wi, (_, cores) in enumerate(wls):
+            for pi, op in enumerate(pts):
+                s = system.simulate_scalar(cores, op)
+                np.testing.assert_allclose(r.ipc[wi, pi], s.ipc, rtol=REL)
+                np.testing.assert_allclose(r.ws[wi, pi], s.ws, rtol=REL)
+                np.testing.assert_allclose(r.stall_frac[wi, pi],
+                                           s.stall_frac, atol=REL)
+                np.testing.assert_allclose(r.runtime_s[wi, pi], s.runtime_s,
+                                           rtol=REL)
+                np.testing.assert_allclose(r.avg_latency_ns[wi, pi],
+                                           s.avg_latency_ns, rtol=1e-3)
+                np.testing.assert_allclose(r.power["system_w"][wi, pi],
+                                           s.power.system_w, rtol=REL)
+                np.testing.assert_allclose(r.energy["system_j"][wi, pi],
+                                           s.energy_j["system"], rtol=REL)
+
+    def test_evaluate_matches_scalar_evaluate(self, homog):
+        wls = homog[::6]
+        vs = [1.25, 1.1, 0.95]
+        wb = engine.WorkloadBatch.from_workloads(wls)
+        cmp_ = engine.evaluate_batch(wb, engine.PointGrid.from_voltages(vs))
+        for wi, (_, cores) in enumerate(wls):
+            for pi, v in enumerate(vs):
+                s = system.evaluate_scalar(cores, system.voltron_point(v))
+                for f in ("perf_loss_pct", "dram_power_savings_pct",
+                          "dram_energy_savings_pct",
+                          "system_energy_savings_pct",
+                          "perf_per_watt_gain_pct",
+                          "cpu_energy_increase_pct"):
+                    np.testing.assert_allclose(getattr(cmp_, f)[wi, pi],
+                                               getattr(s, f), atol=PCT_ATOL)
+
+    def test_scalar_wrapper_equals_engine_entry(self, homog):
+        """system.simulate is a thin W=P=1 wrapper over the engine."""
+        _, cores = homog[3]
+        op = system.voltron_point(1.1)
+        wrapped = system.simulate(cores, op)
+        wb = engine.WorkloadBatch.from_workloads([("x", cores)])
+        direct = engine.simulate_batch(wb, engine.PointGrid.from_points([op]))
+        np.testing.assert_array_equal(wrapped.ipc, direct.ipc[0, 0])
+        assert wrapped.ws == direct.ws[0, 0]
+
+    def test_simulate_cache_canonical_key(self, homog):
+        """Equal-but-distinct TimingParams hit the same cache entry."""
+        from repro.dram.timing import TimingParams
+        _, cores = homog[0]
+        op1 = system.OperatingPoint(timing=TimingParams(15.0, 15.0, 37.5))
+        op2 = system.OperatingPoint(timing=TimingParams(15.0, 15.0, 37.5))
+        assert system.simulate(cores, op1) is system.simulate(cores, op2)
+
+
+class TestControllerParity:
+    @pytest.mark.parametrize("bank_locality", [False, True])
+    def test_controller_matches_scalar(self, homog, bank_locality):
+        for name, cores in homog[::9]:
+            e = voltron.run_controller(name, cores, 5.0, n_intervals=4,
+                                       bank_locality=bank_locality)
+            s = voltron.run_controller(name, cores, 5.0, n_intervals=4,
+                                       bank_locality=bank_locality,
+                                       impl="scalar")
+            np.testing.assert_array_equal(e.selected_voltages,
+                                          s.selected_voltages)
+            for f in ("perf_loss_pct", "dram_power_savings_pct",
+                      "dram_energy_savings_pct", "system_energy_savings_pct",
+                      "perf_per_watt_gain_pct"):
+                np.testing.assert_allclose(getattr(e, f), getattr(s, f),
+                                           atol=PCT_ATOL)
+            assert e.met_target == s.met_target
+
+    def test_suite_equals_per_workload_runs(self, homog):
+        """One batched scan == W independent single-workload scans."""
+        wls = homog[5:8]
+        suite = voltron.run_suite(wls, 5.0, n_intervals=3)
+        for (name, cores), r in zip(wls, suite):
+            single = voltron.run_controller(name, cores, 5.0, n_intervals=3)
+            np.testing.assert_array_equal(r.selected_voltages,
+                                          single.selected_voltages)
+            np.testing.assert_allclose(r.perf_loss_pct, single.perf_loss_pct,
+                                       atol=1e-9)
+
+
+class TestSweepSolveKernel:
+    def test_pallas_interpret_matches_oracle(self, homog):
+        """The Pallas kernel (interpret mode) is numerically identical to
+        the jnp oracle, including at a batch size that needs padding."""
+        import jax.numpy as jnp
+        wls = homog[:3]
+        wb = engine.WorkloadBatch.from_workloads(wls)
+        pg = engine.PointGrid.from_voltages([1.2, 1.0])
+        f32 = lambda x: jnp.asarray(x, jnp.float32)
+        args = []
+        for pi in range(2):
+            for wi in range(3):
+                args.append((f32(wb.mpki[wi:wi + 1]),
+                             f32(wb.ipc_base[wi:wi + 1]),
+                             f32(wb.mlp[wi:wi + 1]),
+                             f32(wb.row_hit[wi:wi + 1]),
+                             f32(wb.eff_banks[wi:wi + 1]),
+                             f32(wb.write_mult[wi:wi + 1]),
+                             f32(pg.t_rcd[pi:pi + 1]),
+                             f32(pg.t_rp[pi:pi + 1]),
+                             f32(pg.t_ras[pi:pi + 1]),
+                             f32(pg.transfer_ns[pi:pi + 1]),
+                             f32(pg.peak_bw_gbps[pi:pi + 1])))
+        stacked = [jnp.concatenate([a[i] for a in args]) for i in range(11)]
+        ref = sweep_ops.solve(*stacked, impl="reference")
+        pal = sweep_ops.solve(*stacked, impl="pallas_interpret")
+        for k in ref:
+            np.testing.assert_allclose(np.asarray(pal[k]),
+                                       np.asarray(ref[k]), rtol=1e-6)
+
+    def test_solve_output_shapes_dtypes(self):
+        import jax.numpy as jnp
+        b, c = 5, 4
+        out = sweep_ops.solve(
+            jnp.full((b, c), 10.0), jnp.full((b, c), 1.5),
+            jnp.full((b, c), 2.0), jnp.full((b,), 0.6), jnp.full((b,), 4.0),
+            jnp.full((b,), 1.3), jnp.full((b,), 13.75), jnp.full((b,), 13.75),
+            jnp.full((b,), 35.0), jnp.full((b,), 5.0), jnp.full((b,), 25.6))
+        assert out["ipc"].shape == (b, c)
+        assert out["ipc"].dtype == jnp.float32
+        for k in ("req_rate_per_ns", "avg_loaded_ns", "utilization",
+                  "acts_per_ns", "reads_per_ns"):
+            assert out[k].shape == (b,)

@@ -82,8 +82,8 @@ MULTIDEV_SCRIPT = textwrap.dedent("""
     from repro.configs.base import ShapeConfig
     import dataclasses
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch import mesh as mesh_lib
+    mesh = mesh_lib.make_mesh((4, 2), ("data", "model"))
     cfg = base.get_config("smollm_135m", "smoke")
     cfg = dataclasses.replace(cfg, n_heads=4, n_kv_heads=2, remat=True)
     shape = ShapeConfig("tiny_train", 64, 8, "train")
