@@ -7,14 +7,17 @@ import numpy as np
 
 
 def fig04_error_rate():
-    """Fraction of erroneous cache lines vs supply voltage, per DIMM."""
-    from repro.dram import chips
+    """Fraction of erroneous cache lines vs supply voltage, per DIMM —
+    the whole population through one batched characterization call."""
+    from repro import engine
     rows = []
-    v = np.round(np.arange(1.35, 0.99, -0.025), 4)
-    for d in chips.population():
-        f = d.line_error_fraction(v)
+    grid = engine.DimmGrid.from_population()
+    res = engine.characterize_batch(grid, engine.population.SWEEP_VOLTAGES)
+    v = res.v_grid
+    for di, mod in enumerate(grid.modules):
+        f = res.line_error_fraction[di, :, 0]
         first = v[f > 0].max() if (f > 0).any() else np.nan
-        rows.append((f"fig4/{d.module}", f"vmin={d.vmin}",
+        rows.append((f"fig4/{mod}", f"vmin={grid.vmin[di]}",
                      f"errors_from={first}"))
     return rows
 
@@ -30,18 +33,21 @@ def fig05_bitline():
 
 
 def fig06_latency_distribution():
-    """tRCD_min / tRP_min distributions per vendor vs voltage."""
-    from repro.dram import circuit
+    """tRCD_min / tRP_min distributions per vendor vs voltage: one batched
+    call per vendor over a synthetic process-variation (z-score) grid."""
+    from repro import engine
     rows = []
     zs = np.linspace(-2, 2, 21)
+    voltages = [1.35, 1.25, 1.15, 1.10]
     for vendor in "ABC":
-        for v in [1.35, 1.25, 1.15, 1.10]:
-            for op in ("rcd", "rp"):
-                vals = [circuit.measured_min_latency(op, v, vendor, 20, z)
-                        for z in zs]
-                frac10 = float(np.mean(np.asarray(vals) <= 10.0))
+        grid = engine.DimmGrid.from_vendor_z(vendor, zs)
+        res = engine.characterize_batch(grid, voltages)
+        for vi, v in enumerate(voltages):
+            for op, tmin in (("rcd", res.t_rcd_min), ("rp", res.t_rp_min)):
+                vals = tmin[:, vi, 0]
+                frac10 = float(np.mean(vals <= 10.0))
                 rows.append((f"fig6/{vendor}/{op}/V={v}",
-                             f"min={min(vals)}ns max={max(vals)}ns",
+                             f"min={vals.min()}ns max={vals.max()}ns",
                              f"frac_ok_at_10ns={frac10:.2f}"))
     return rows
 
@@ -62,11 +68,14 @@ def fig07_spice_fit():
 
 
 def fig08_spatial_locality():
-    from repro.dram import chips, errors
+    """Spatial error maps one step below V_min, from the batched sweep
+    (each DIMM reads its own voltage off the shared V grid)."""
+    from repro import engine
     rows = []
-    for mod in ("B5", "C2"):
-        d = [x for x in chips.population() if x.module == mod][0]
-        prob = errors.error_probability_map(d, d.vmin - 0.025)
+    grid = engine.DimmGrid.from_population(("B5", "C2"))
+    res = engine.characterize_batch(grid, np.round(grid.vmin - 0.025, 4))
+    for di, mod in enumerate(grid.modules):
+        prob = res.row_error_prob[di, di, 0]
         hot_banks = int((prob.max(axis=1) > 1e-9).sum())
         hot_rows = int((prob.max(axis=0) > 1e-9).sum())
         rows.append((f"fig8/{mod}", f"banks_with_errors={hot_banks}/8",
@@ -103,13 +112,19 @@ def fig10_temperature():
 
 
 def fig11_retention():
-    from repro.dram import chips
+    """Weak-cell counts over the (voltage, temperature, retention) grid in
+    one batched call."""
+    from repro import engine
     rows = []
-    for t in (64, 256, 512, 1024, 2048):
-        for temp, v in ((20, 1.35), (20, 1.15), (70, 1.35), (70, 1.15)):
-            n = chips.expected_weak_cells(t, temp, v)
-            rows.append((f"fig11/ret={t}ms/{temp}C/{v}V",
-                         f"weak_cells={n:.1f}", ""))
+    voltages, temps = (1.35, 1.15), (20.0, 70.0)
+    ret = (64.0, 256.0, 512.0, 1024.0, 2048.0)
+    grid = engine.DimmGrid.from_population(("A1",))
+    res = engine.characterize_batch(grid, voltages, temps, retention_ms=ret)
+    for ri, t in enumerate(ret):
+        for ti, vi in ((0, 0), (0, 1), (1, 0), (1, 1)):
+            n = res.expected_weak_cells[vi, ti, ri]
+            rows.append((f"fig11/ret={t:.0f}ms/{temps[ti]:.0f}C"
+                         f"/{voltages[vi]}V", f"weak_cells={n:.1f}", ""))
     return rows
 
 

@@ -2,48 +2,61 @@
 31-DIMM population: Fig. 4 error curves, Fig. 6 latency distributions,
 Fig. 8 spatial maps (ASCII), Fig. 11 retention.
 
+The whole population runs through the batched characterization engine
+(`repro.engine.population`): one jit-compiled sweep over the DIMM x
+voltage x temperature grid, sharded over however many devices are
+available (a no-op on one).
+
   PYTHONPATH=src python examples/characterize_dimms.py
 """
 import numpy as np
 
-from repro.dram import chips, circuit, errors
+from repro import engine
+from repro.engine.population import SWEEP_VOLTAGES
 
 
 def main():
+    grid = engine.DimmGrid.from_population()
+    res = engine.characterize_batch(grid, SWEEP_VOLTAGES, (20.0, 70.0))
+
     print("== Fig. 4: error onset per DIMM ==")
-    v = np.round(np.arange(1.35, 0.99, -0.025), 4)
-    for d in chips.population():
-        f = d.line_error_fraction(v)
+    for di, mod in enumerate(grid.modules):
+        f = res.line_error_fraction[di, :, 0]
         curve = "".join(" " if x == 0 else
                         ("." if x < 1e-6 else
                          ("o" if x < 1e-2 else "#")) for x in f)
-        print(f"  {d.module:4s} (V_min {d.vmin:.3f})  1.35V [{curve}] 1.00V")
+        print(f"  {mod:4s} (V_min {grid.vmin[di]:.3f})  "
+              f"1.35V [{curve}] 1.00V")
 
     print("\n== Fig. 6: tRCD_min / tRP_min vs voltage (vendor medians) ==")
+    show_v = [1.35, 1.30, 1.25, 1.20, 1.15, 1.10]
     for vendor in "ABC":
-        row = []
-        for vv in [1.35, 1.30, 1.25, 1.20, 1.15, 1.10]:
-            rcd = circuit.measured_min_latency("rcd", vv, vendor)
-            rp = circuit.measured_min_latency("rp", vv, vendor)
-            row.append(f"{vv:.2f}V:{rcd:.1f}/{rp:.1f}")
+        typ = engine.characterize_batch(
+            engine.DimmGrid.from_vendor_z(vendor, [0.0]), show_v)
+        row = [f"{v:.2f}V:{typ.t_rcd_min[0, i, 0]:.1f}"
+               f"/{typ.t_rp_min[0, i, 0]:.1f}"
+               for i, v in enumerate(show_v)]
         print(f"  vendor {vendor}: " + "  ".join(row))
 
     print("\n== Fig. 8: spatial error maps one step below V_min ==")
-    for mod in ("B5", "C2"):
-        d = [x for x in chips.population() if x.module == mod][0]
-        prob = errors.error_probability_map(d, d.vmin - 0.025)
-        print(f"  {mod} (vendor {d.vendor}): banks x row-groups "
+    sub = grid.select(("B5", "C2"))
+    maps = engine.characterize_batch(sub, np.round(sub.vmin - 0.025, 4))
+    for di, mod in enumerate(sub.modules):
+        prob = maps.row_error_prob[di, di, 0]
+        print(f"  {mod} (vendor {sub.vendors[di]}): banks x row-groups "
               "(#=erroring region)")
         for b in range(prob.shape[0]):
             line = "".join("#" if p > 1e-9 else "." for p in prob[b][::8])
             print(f"    bank {b}: {line}")
 
     print("\n== Fig. 11: weak cells vs retention time ==")
-    for t in (64, 256, 512, 1024, 2048):
-        print(f"  {t:5d} ms: "
-              f"20C/1.35V={chips.expected_weak_cells(t, 20, 1.35):7.1f}  "
-              f"20C/1.15V={chips.expected_weak_cells(t, 20, 1.15):7.1f}  "
-              f"70C/1.35V={chips.expected_weak_cells(t, 70, 1.35):7.1f}")
+    w = res.expected_weak_cells                  # [V, T, R]
+    vi = {v: i for i, v in enumerate(res.v_grid)}
+    for ri, t in enumerate(res.retention_ms):
+        print(f"  {t:5.0f} ms: "
+              f"20C/1.35V={w[vi[1.35], 0, ri]:7.1f}  "
+              f"20C/1.15V={w[vi[1.15], 0, ri]:7.1f}  "
+              f"70C/1.35V={w[vi[1.35], 1, ri]:7.1f}")
     print("  -> refresh interval unchanged at reduced voltage (paper Sec 4.6)")
 
 

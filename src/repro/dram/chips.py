@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import zlib
 
 import numpy as np
 
@@ -54,6 +55,28 @@ TABLE7 = [
 # truncation that makes operation *exactly* error-free at/above V_min.
 CELL_SIGMA = {"A": 0.012, "B": 0.022, "C": 0.030}
 CELL_XMAX = 3.5       # truncated-normal support: x in [-XMAX, XMAX]
+
+# Multi-bit-error (Fig. 9) and retention (Fig. 11) calibration constants —
+# shared with the batched engine (repro.engine.population), which re-derives
+# the same closed forms in jnp; keep the two in sync through these names.
+BEAT_BAD_FRAC = 0.55              # beats affected within a failing line
+P_BIT_BASE = 0.08                 # per-bit flip prob in a failing beat...
+P_BIT_SLOPE = 0.3                 # ...growing with the voltage deficit
+DEFICIT_RANGE_V = 0.2             # deficit normalization (V below V_min)
+PATTERN_JITTER = 0.02             # amplitude of the (insignificant) pattern
+#                                   effect on the BER (Appendix B ANOVA)
+RET_BASE_20C = 66.0               # weak cells @2048 ms / 20 C / 1.35 V
+RET_BASE_70C = 2510.0             # ... @70 C
+RET_GAMMA = 1.86                  # retention-time growth exponent
+RET_KV = 0.136                    # voltage sensitivity at 20 C
+RET_KV_SHRINK = 0.62              # ...shrinking toward 70 C
+RET_T0_MS, RET_T1_MS = 256.0, 2048.0   # onset / calibration retention times
+
+
+def pattern_phase(data_pattern: str) -> int:
+    """Stable per-pattern phase for the BER jitter term (crc32, not the
+    per-process-salted builtin ``hash``, so results reproduce across runs)."""
+    return zlib.crc32(str(data_pattern).encode()) % 7
 
 BANKS = hw.BANKS_PER_RANK
 ROWS = hw.ROWS_PER_BANK
@@ -197,16 +220,18 @@ class DIMM:
         frac_line = self.line_error_fraction(v, t_rcd, t_rp, temp_c)
         bits_per_line = hw.CACHE_LINE_BYTES * 8
         # bits-in-error per failing line (Fig. 9: multi-bit beats dominate)
-        mean_bad_bits = 0.55 * 8 * self._beat_bad_bits_mean(v)
-        jitter = 1.0 + 0.02 * np.sin(hash(data_pattern) % 7 + np.atleast_1d(v) * 40)
+        mean_bad_bits = (BEAT_BAD_FRAC * hw.BEATS_PER_LINE
+                         * self._beat_bad_bits_mean(v))
+        jitter = 1.0 + PATTERN_JITTER * np.sin(
+            pattern_phase(data_pattern) + np.atleast_1d(v) * 40)
         return frac_line * mean_bad_bits / bits_per_line * jitter
 
     def _beat_bad_bits_mean(self, v) -> np.ndarray:
         """Mean # bad bits in a *failing* 64-bit beat, grows as V drops."""
         v = np.atleast_1d(np.asarray(v, dtype=np.float64))
-        deficit = np.clip((self.vmin - v) / 0.2, 0.0, 1.5)
-        p_bit = 0.08 + 0.3 * deficit          # per-bit flip prob inside beat
-        return 64 * p_bit
+        deficit = np.clip((self.vmin - v) / DEFICIT_RANGE_V, 0.0, 1.5)
+        p_bit = P_BIT_BASE + P_BIT_SLOPE * deficit   # per-bit flip prob
+        return hw.BEAT_BITS * p_bit
 
     def beat_error_distribution(self, v, t_rcd: float = 10.0,
                                 t_rp: float = 10.0) -> dict:
@@ -216,12 +241,12 @@ class DIMM:
         v_arr = np.atleast_1d(np.asarray(v, dtype=np.float64))
         frac_line = self.line_error_fraction(v_arr, t_rcd, t_rp)
         # a failing line has ~55% of its 8 beats affected
-        p_beat_bad = frac_line * 0.55
-        deficit = np.clip((self.vmin - v_arr) / 0.2, 0.0, 1.5)
-        p_bit = 0.08 + 0.3 * deficit
-        p0 = stats.binom.pmf(0, 64, p_bit)
-        p1 = stats.binom.pmf(1, 64, p_bit)
-        p2 = stats.binom.pmf(2, 64, p_bit)
+        p_beat_bad = frac_line * BEAT_BAD_FRAC
+        deficit = np.clip((self.vmin - v_arr) / DEFICIT_RANGE_V, 0.0, 1.5)
+        p_bit = P_BIT_BASE + P_BIT_SLOPE * deficit
+        p0 = stats.binom.pmf(0, hw.BEAT_BITS, p_bit)
+        p1 = stats.binom.pmf(1, hw.BEAT_BITS, p_bit)
+        p2 = stats.binom.pmf(2, hw.BEAT_BITS, p_bit)
         # renormalize within failing beats (conditioned on >=1 flip)
         denom = np.maximum(1.0 - p0, 1e-12)
         one = p_beat_bad * p1 / denom
@@ -252,13 +277,14 @@ class DIMM:
 def expected_weak_cells(retention_ms, temp_c=20.0, v=hw.VDD_NOMINAL):
     """Mean weak-cell count per DIMM (Fig. 11 calibration)."""
     retention_ms = np.asarray(retention_ms, dtype=np.float64)
-    base20, base70, gamma = 66.0, 2510.0, 1.86
     tfrac = np.clip((temp_c - 20.0) / 50.0, 0.0, None)
-    base = base20 * (base70 / base20) ** tfrac
+    base = RET_BASE_20C * (RET_BASE_70C / RET_BASE_20C) ** tfrac
     # Fig. 11: 66 -> 75 cells (1.35 -> 1.15 V) at 20C; 2510 -> 2641 at 70C.
-    kv = 0.136 * (1.0 - 0.62 * tfrac)     # voltage sensitivity shrinks at 70C
-    t_rel = np.clip((retention_ms - 256.0) / (2048.0 - 256.0), 0.0, None)
-    return base * t_rel ** gamma * (1.0 + kv * np.maximum(1.35 - v, 0.0) / 0.2)
+    kv = RET_KV * (1.0 - RET_KV_SHRINK * tfrac)   # sensitivity shrinks at 70C
+    t_rel = np.clip((retention_ms - RET_T0_MS) / (RET_T1_MS - RET_T0_MS),
+                    0.0, None)
+    return base * t_rel ** RET_GAMMA * (
+        1.0 + kv * np.maximum(hw.VDD_NOMINAL - v, 0.0) / DEFICIT_RANGE_V)
 
 
 @functools.lru_cache(maxsize=1)

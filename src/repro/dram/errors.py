@@ -23,6 +23,17 @@ from repro.dram import chips
 from repro.kernels.voltage_inject import ops as inject_ops
 
 
+def _x_threshold(dimm: chips.DIMM, op: str, v: float, t_prog: float,
+                 temp_c: float) -> np.ndarray:
+    """Cell-failure z-threshold, with the same float32 rounding as
+    ``DIMM.line_error_fraction`` (``required_latency`` is float32, and the
+    threshold arithmetic stays in that dtype) so the spatial maps and the
+    error-onset curve agree exactly on the shared quantity.  The batched
+    engine (``repro.engine.population``) mirrors this rounding."""
+    req = dimm.required_latency(op, v, temp_c)            # float32
+    return (t_prog / req - 1.0) / dimm.cell_sigma
+
+
 def error_probability_map(dimm: chips.DIMM, v: float, t_rcd: float = 10.0,
                           t_rp: float = 10.0, temp_c: float = 20.0) -> np.ndarray:
     """P(row has >=1 erroneous line) per (bank, row-group), shape [8, 256].
@@ -34,8 +45,7 @@ def error_probability_map(dimm: chips.DIMM, v: float, t_rcd: float = 10.0,
     field = dimm.susceptibility                       # [banks, groups]
     p_ok = np.ones_like(field)
     for op, t_prog in (("rcd", t_rcd), ("rp", t_rp)):
-        req = float(np.asarray(dimm.required_latency(op, v, temp_c)))
-        x_thr = (t_prog / req - 1.0) / dimm.cell_sigma
+        x_thr = _x_threshold(dimm, op, v, t_prog, temp_c)
         p_ok_line = chips._trunc_phi(x_thr - field)
         # a row holds LINES_PER_ROW cache lines; any line failing marks it
         p_ok = p_ok * p_ok_line ** hw.LINES_PER_ROW
@@ -48,8 +58,7 @@ def row_line_probs(dimm: chips.DIMM, v: float, t_rcd: float = 10.0,
     field = dimm.susceptibility
     p_ok = np.ones_like(field)
     for op, t_prog in (("rcd", t_rcd), ("rp", t_rp)):
-        req = float(np.asarray(dimm.required_latency(op, v, temp_c)))
-        x_thr = (t_prog / req - 1.0) / dimm.cell_sigma
+        x_thr = _x_threshold(dimm, op, v, t_prog, temp_c)
         p_ok = p_ok * chips._trunc_phi(x_thr - field)
     return 1.0 - p_ok
 

@@ -1,10 +1,12 @@
 """Batched, jit-compiled simulation engine for the paper's design-space
 sweeps.
 
-Every result in the paper (Figs. 12-19, Table 5) is a sweep over
-(workload, V_array, profiling interval).  The scalar pipeline ran each
-operating point through Python one at a time; this package runs the whole
-grid as struct-of-arrays JAX computation.
+Every result in the paper is a sweep: the system half (Figs. 12-19,
+Table 5) over (workload, V_array, profiling interval), the
+characterization half (Figs. 4, 6, 8, 11) over (DIMM, V_supply,
+temperature, data pattern).  The scalar pipeline ran each point through
+Python one at a time; this package runs each grid as struct-of-arrays JAX
+computation.
 
 Batching axes
 =============
@@ -15,11 +17,29 @@ Batching axes
   voltages/rates with timings resolved via the vectorized circuit model).
 - **T** — Voltron profiling intervals, scanned (``controller.run_batched``
   carries the selected voltage per workload through one ``lax.scan``).
+- **D** — DIMMs (``DimmGrid``: stacked Table 7 identities with the derived
+  per-DIMM latency scale, cell sigma and susceptibility field).
 
-``simulate_batch``/``evaluate_batch`` flatten W x P into one batch axis and
-dispatch the damped fixed-point CPI solve to ``repro.kernels.sweep_solve``
-(pure-jnp oracle off-TPU, Pallas kernel on TPU), then finish with
-vectorized weighted-speedup / power / energy math.
+The flat batch-axis convention
+==============================
+
+Every engine entry point follows the same shape discipline:
+
+1. resolve all circuit-model inputs **eagerly and vectorized** at container
+   construction (``PointGrid`` resolves timings, ``characterize_batch``
+   resolves required raw latencies — one call per vendor x temperature, no
+   per-element Python loop);
+2. **flatten the full grid into one leading batch axis** (W x P for
+   ``simulate_batch``/``evaluate_batch``, D x V x T for
+   ``characterize_batch``) and run it as a single jit-compiled call;
+3. **shard the flat axis, never loop it**: the flat axis is padded to a
+   multiple of the device count and split with a
+   ``jax.sharding.NamedSharding`` over the 1-D ``("batch",)`` mesh from
+   ``repro.launch.mesh.make_batch_mesh()``.  On one device the mesh has a
+   single slot and sharding is skipped entirely — results are identical
+   with and without it.  Per-element constants ride along on the flat axis;
+   genuinely shared operands (the [D, F] susceptibility field) stay
+   replicated and are gathered on-device.
 
 Scalar-wrapper compatibility
 ============================
@@ -28,11 +48,16 @@ The legacy entry points survive as thin wrappers: ``memsim.system.simulate``
 and ``evaluate`` call the engine with W=P=1 (the original NumPy path is kept
 as ``system.simulate_scalar`` and is what the parity tests compare against),
 and ``core.voltron.run_controller`` is ``run_suite`` with one workload.
-Results match the scalar path to float32 tolerance; shapes and dataclass
-fields are unchanged.
+The characterization path keeps its reference as
+``characterize_batch(..., impl="scalar")`` — the original per-DIMM
+chips/errors loop.  Results match the scalar paths to float32 tolerance
+(system sweep) / 1e-6 (characterization, float64 end to end); shapes and
+dataclass fields are unchanged.
 """
 from repro.engine.batch import PointGrid, WorkloadBatch  # noqa: F401
 from repro.engine.controller import (ControllerBatchResult,  # noqa: F401
                                      run_batched)
+from repro.engine.population import (CharacterizationBatch,  # noqa: F401
+                                     DimmGrid, characterize_batch)
 from repro.engine.solve import (BatchResult, ComparisonBatch,  # noqa: F401
                                 evaluate_batch, simulate_batch)

@@ -133,16 +133,17 @@ class PointGrid:
                               v.shape).copy()
         t = _blend_fast_banks(circuit.timings_for_voltages(v), fbf)
         return cls(v, np.full_like(v, hw.VDD_NOMINAL),
-                   np.full_like(v, 1600.0), fbf, t[:, 0], t[:, 1], t[:, 2])
+                   np.full_like(v, hw.DDR3L_DATA_RATE), fbf,
+                   t[:, 0], t[:, 1], t[:, 2])
 
     @classmethod
     def nominal(cls) -> "PointGrid":
         """The single baseline point: 1.35 V, 1600 MT/s, *standard* DDR3L
         timings (Table 2) — not the guardbanded Table 3 values."""
         one = np.ones(1)
-        return cls(one * hw.VDD_NOMINAL, one * hw.VDD_NOMINAL, one * 1600.0,
-                   one * 0.0, one * hw.T_RCD_STD, one * hw.T_RP_STD,
-                   one * hw.T_RAS_STD)
+        return cls(one * hw.VDD_NOMINAL, one * hw.VDD_NOMINAL,
+                   one * hw.DDR3L_DATA_RATE, one * 0.0, one * hw.T_RCD_STD,
+                   one * hw.T_RP_STD, one * hw.T_RAS_STD)
 
     @property
     def n_points(self) -> int:
@@ -150,11 +151,13 @@ class PointGrid:
 
     @property
     def freq_ratio(self) -> np.ndarray:
-        return self.data_rate_mts / 1600.0
+        return self.data_rate_mts / hw.DDR3L_DATA_RATE
 
     @property
     def clk_ns(self) -> np.ndarray:
-        return 2000.0 / self.data_rate_mts
+        # ns per controller clock: the DDR bus moves 2 transfers per clock,
+        # so at the rated 1600 MT/s this is exactly hw.DDR3L_CLK_NS.
+        return hw.DDR3L_DATA_RATE * hw.DDR3L_CLK_NS / self.data_rate_mts
 
     @property
     def transfer_ns(self) -> np.ndarray:

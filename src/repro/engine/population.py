@@ -1,0 +1,398 @@
+"""Population-scale characterization: the paper's Secs. 4-5 sweeps, batched.
+
+The characterization half of the paper (Figs. 4, 6, 8, 11) evaluates 31
+DIMMs x voltages x temperatures x data patterns.  The scalar path walks that
+grid one DIMM at a time through :mod:`repro.dram.chips` /
+:mod:`repro.dram.errors` Python loops; this module runs the whole population
+as struct-of-arrays JAX, the same substrate PR 1 built for the workload x
+operating-point sweep:
+
+- ``DimmGrid`` stacks the Table 7 identities and every derived per-DIMM
+  parameter (latency scale, cell sigma, signal-integrity floor, spatial
+  susceptibility field) into one array per field;
+- ``characterize_batch`` resolves the required raw latencies up front
+  through the eager circuit model (one vectorized call per vendor x
+  temperature, bitwise-equal to ``DIMM.required_latency``), flattens the
+  D x V x T grid into a single batch axis, and evaluates the error-onset
+  (Fig. 4), min-latency (Fig. 6), spatial-probability (Fig. 8) and
+  retention (Fig. 11) models in one jit-compiled float64 call;
+- the flat axis is sharded over the available devices with a
+  ``jax.sharding.NamedSharding`` built from :func:`repro.launch.mesh
+  .make_batch_mesh` — a transparent no-op on one device, a population-scale
+  fan-out on a real mesh.
+
+The original per-DIMM loop survives as ``impl="scalar"`` (the same
+convention as ``system.simulate_scalar`` / voltron ``impl="scalar"``) and is
+the parity reference: ``tests/test_population.py`` asserts the batched path
+matches it within 1e-6 on every Fig. 4/6/8/11 quantity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from repro import hw
+from repro.dram import chips, circuit, timing
+from repro.launch import mesh as mesh_lib
+
+FIELD_SIZE = chips.BANKS * 256          # susceptibility entries per DIMM
+_BITS_PER_LINE = hw.CACHE_LINE_BYTES * 8
+
+# The standard characterization sweep of Section 4.1 (1.35 V down to 1.00 V
+# in 0.025 V steps) and the Fig. 11 retention grid.
+SWEEP_VOLTAGES = np.round(np.arange(1.35, 0.99, -0.025), 4)
+RETENTION_GRID_MS = (64.0, 256.0, 512.0, 1024.0, 2048.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class DimmGrid:
+    """D simulated DIMMs as one array per derived parameter (SoA).
+
+    Everything ``characterize_batch`` needs is resolved at construction:
+    identity (module/vendor/Table-7 V_min), the per-DIMM multiplicative
+    latency scale, the vendor cell sigma and signal-integrity floor, and
+    the [D, banks, row-groups] spatial susceptibility field.  ``dimms``
+    keeps the source :class:`repro.dram.chips.DIMM` objects when the grid
+    was built from the population — the scalar parity path needs them;
+    synthetic grids (``from_vendor_z``) carry ``None``.
+    """
+
+    modules: tuple
+    vendors: tuple
+    vmin: np.ndarray             # [D] Table 7 V_min (nan for synthetic)
+    latency_scale: np.ndarray    # [D] multiplicative process factor
+    cell_sigma: np.ndarray       # [D]
+    fail_floor: np.ndarray       # [D] signal-integrity floor (V)
+    susceptibility: np.ndarray   # [D, banks, row-groups]
+    dimms: tuple | None = None
+
+    @classmethod
+    def from_dimms(cls, dimms) -> "DimmGrid":
+        dimms = tuple(dimms)
+        return cls(
+            tuple(d.module for d in dimms),
+            tuple(d.vendor for d in dimms),
+            np.array([d.vmin for d in dimms], np.float64),
+            np.array([d.latency_scale for d in dimms], np.float64),
+            np.array([d.cell_sigma for d in dimms], np.float64),
+            np.array([circuit.VENDORS[d.vendor].fail_floor for d in dimms],
+                     np.float64),
+            np.stack([d.susceptibility for d in dimms]),
+            dimms)
+
+    @classmethod
+    def from_population(cls, modules=None) -> "DimmGrid":
+        """The 31 Table 7 DIMMs, optionally restricted to ``modules``."""
+        pop = chips.population()
+        if modules is not None:
+            by_mod = {d.module: d for d in pop}
+            pop = tuple(by_mod[m] for m in modules)
+        return cls.from_dimms(pop)
+
+    @classmethod
+    def from_vendor_z(cls, vendor: str, zs) -> "DimmGrid":
+        """Synthetic process-variation grid: one DIMM per z-score, flat
+        susceptibility.  ``t_rcd_min``/``t_rp_min`` from the batch then
+        reproduce ``circuit.measured_min_latency(op, v, vendor, t, z)``
+        (Fig. 6 distributions); error/BER quantities need a measured V_min
+        and are NaN for these grids."""
+        zs = np.atleast_1d(np.asarray(zs, np.float64))
+        vm = circuit.VENDORS[vendor]
+        d = zs.size
+        return cls(
+            tuple(f"{vendor}z{i}" for i in range(d)),
+            (vendor,) * d,
+            np.full(d, np.nan),
+            1.0 + vm.dimm_sigma * zs,
+            np.full(d, chips.CELL_SIGMA[vendor]),
+            np.full(d, vm.fail_floor),
+            np.zeros((d, chips.BANKS, 256)),
+            None)
+
+    def select(self, modules) -> "DimmGrid":
+        idx = [self.modules.index(m) for m in modules]
+        return DimmGrid(
+            tuple(self.modules[i] for i in idx),
+            tuple(self.vendors[i] for i in idx),
+            self.vmin[idx], self.latency_scale[idx], self.cell_sigma[idx],
+            self.fail_floor[idx], self.susceptibility[idx],
+            None if self.dimms is None
+            else tuple(self.dimms[i] for i in idx))
+
+    @property
+    def n_dimms(self) -> int:
+        return len(self.modules)
+
+
+@dataclasses.dataclass(frozen=True)
+class CharacterizationBatch:
+    """Results of one D x V x T characterization sweep.
+
+    Array axes: D DIMMs, V voltages, T temperatures, P data patterns,
+    R retention times, [B, G] = (banks, row-groups).
+    """
+
+    modules: tuple
+    v_grid: np.ndarray                  # [V]
+    t_grid: np.ndarray                  # [T]
+    patterns: tuple                     # [P]
+    retention_ms: np.ndarray            # [R]
+    line_error_fraction: np.ndarray     # [D, V, T]        (Fig. 4)
+    ber: np.ndarray                     # [D, V, T, P]     (Appendix B)
+    t_rcd_min: np.ndarray               # [D, V, T]        (Fig. 6)
+    t_rp_min: np.ndarray                # [D, V, T]        (Fig. 6)
+    row_error_prob: np.ndarray          # [D, V, T, B, G]  (Fig. 8)
+    line_error_prob: np.ndarray         # [D, V, T, B, G]
+    expected_weak_cells: np.ndarray     # [V, T, R]        (Fig. 11)
+
+    def vmin_measured(self, t_index: int = 0) -> np.ndarray:
+        """Per-DIMM V_min re-measured the paper's way: lowest grid voltage
+        with zero errors (NaN when every voltage errors).  Meaningful when
+        ``v_grid`` covers the standard sweep."""
+        frac = self.line_error_fraction[:, :, t_index]
+        ok_v = np.where(frac <= 0.0, self.v_grid[None, :], np.inf)
+        vmin = ok_v.min(axis=1)
+        return np.where(np.isfinite(vmin), vmin, np.nan)
+
+
+# --------------------------------------------------------------------------
+# Batched implementation
+# --------------------------------------------------------------------------
+def _required_latency_grid(grid: DimmGrid, v, t_grid) -> dict:
+    """Mean required raw latency per (DIMM, voltage, temperature), ns.
+
+    One eager vectorized circuit call per (op, vendor, temperature) — no
+    per-DIMM loop — producing values bitwise-equal to
+    ``DIMM.required_latency`` (same function, same input vector)."""
+    req = {op: np.zeros((grid.n_dimms, v.size, len(t_grid)))
+           for op in ("rcd", "rp")}
+    vendors = sorted(set(grid.vendors))
+    sel = {vd: np.asarray([i for i, x in enumerate(grid.vendors) if x == vd])
+           for vd in vendors}
+    # DIMM.required_latency multiplies the float32 circuit output by a
+    # Python-float scale, which numpy keeps in float32 — reproduce that
+    # rounding so the batched path is value-identical (the f64 req array
+    # holds exactly-representable f32 values).
+    scale32 = grid.latency_scale.astype(np.float32)
+    for op in ("rcd", "rp"):
+        for ti, temp in enumerate(t_grid):
+            for vd in vendors:
+                raw = _vendor_raw_cached(op, vd, float(temp), v.tobytes())
+                req[op][sel[vd], :, ti] = \
+                    raw[None, :] * scale32[sel[vd], None]
+    return req
+
+
+@functools.lru_cache(maxsize=256)
+def _vendor_raw_cached(op: str, vendor: str, temp: float,
+                       v_bytes: bytes) -> np.ndarray:
+    """Memoized eager circuit call (the repeated-sweep hot path re-resolves
+    the same voltage grid every call; the result is pure in its inputs)."""
+    v = np.frombuffer(v_bytes, np.float64)
+    out = np.asarray(circuit.vendor_raw_latency(op, v, vendor, temp))
+    out.flags.writeable = False
+    return out
+
+
+def _ndtr(x):
+    """Standard normal CDF via erfc — matches ``scipy.special.ndtr`` to the
+    last float64 ulp and lowers to a much faster XLA:CPU kernel than
+    ``jax.scipy.special.ndtr``."""
+    return 0.5 * jax.lax.erfc(-x * (1.0 / np.sqrt(2.0)))
+
+
+@jax.jit
+def _characterize_flat(req_rcd, req_rp, sigma, floor, vmin, v, temp, d_idx,
+                       field, pattern_h, retention_ms, t_rcd, t_rp):
+    """The flat-batch characterization kernel (float64 under x64).
+
+    All leading axes are the flattened N = D*V*T grid (sharded);
+    ``field`` [D, FIELD_SIZE] is replicated and gathered per flat element
+    through ``d_idx``; ``pattern_h`` [P] and ``retention_ms`` [R] are
+    replicated.
+    """
+    xmax = chips.CELL_XMAX
+    lo, hi = _ndtr(-jnp.asarray(xmax, req_rcd.dtype)), \
+        _ndtr(jnp.asarray(xmax, req_rcd.dtype))
+
+    def trunc_phi(x):
+        p = (_ndtr(jnp.clip(x, -xmax, xmax)) - lo) / (hi - lo)
+        return jnp.where(x <= -xmax, 0.0, jnp.where(x >= xmax, 1.0, p))
+
+    # -- error onset (Fig. 4) + spatial maps (Fig. 8) ----------------------
+    # The scalar path derives the x threshold in float32 (required_latency
+    # is float32 and the threshold arithmetic stays in that dtype — see
+    # errors._x_threshold); mirror that rounding, then evaluate the CDF in
+    # float64 exactly like chips._trunc_phi.
+    field_n = field[d_idx]                                   # [N, F]
+    sigma32 = sigma.astype(jnp.float32)
+    p_ok = jnp.ones_like(field_n)
+    for t_prog, req in ((t_rcd, req_rcd), (t_rp, req_rp)):
+        x32 = (t_prog.astype(jnp.float32) / req.astype(jnp.float32)
+               - 1.0) / sigma32                              # [N] f32
+        p_ok = p_ok * trunc_phi(x32.astype(field.dtype)[:, None] - field_n)
+    frac = 1.0 - jnp.mean(p_ok, axis=1)
+    frac = jnp.where(v < floor, jnp.maximum(frac, 0.5), frac)
+    line_map = 1.0 - p_ok
+    row_map = 1.0 - p_ok ** hw.LINES_PER_ROW
+
+    # -- measured minimum latencies (Fig. 6): platform 2.5 ns grid ---------
+    step = hw.PLATFORM_LATENCY_STEP
+    quant = lambda r: jnp.ceil(r / step - 1e-9) * step
+    tmin_rcd, tmin_rp = quant(req_rcd), quant(req_rp)
+
+    # -- BER (Appendix B / Fig. 9 densities) -------------------------------
+    deficit = jnp.clip((vmin - v) / chips.DEFICIT_RANGE_V, 0.0, 1.5)
+    mean_bad_bits = (chips.BEAT_BAD_FRAC * hw.BEATS_PER_LINE
+                     * (hw.BEAT_BITS
+                        * (chips.P_BIT_BASE + chips.P_BIT_SLOPE * deficit)))
+    jitter = 1.0 + chips.PATTERN_JITTER * jnp.sin(pattern_h[None, :]
+                                                  + v[:, None] * 40)
+    ber = (frac * mean_bad_bits)[:, None] / _BITS_PER_LINE * jitter
+
+    # -- retention (Fig. 11): jnp form of chips.expected_weak_cells --------
+    tfrac = jnp.clip((temp - 20.0) / 50.0, 0.0, None)
+    base = chips.RET_BASE_20C * (chips.RET_BASE_70C
+                                 / chips.RET_BASE_20C) ** tfrac
+    kv = chips.RET_KV * (1.0 - chips.RET_KV_SHRINK * tfrac)
+    t_rel = jnp.clip((retention_ms[None, :] - chips.RET_T0_MS)
+                     / (chips.RET_T1_MS - chips.RET_T0_MS), 0.0, None)
+    weak = (base[:, None] * t_rel ** chips.RET_GAMMA
+            * (1.0 + kv * jnp.maximum(hw.VDD_NOMINAL - v, 0.0)
+               / chips.DEFICIT_RANGE_V)[:, None])
+
+    return {"frac": frac, "ber": ber, "tmin_rcd": tmin_rcd,
+            "tmin_rp": tmin_rp, "line_map": line_map, "row_map": row_map,
+            "weak": weak}
+
+
+def _pad_flat(arrays: list, n_devices: int) -> tuple:
+    """Pad each array's leading (flat-batch) axis up to a multiple of the
+    device count by repeating the first row; returns (padded, n_pad)."""
+    n = arrays[0].shape[0]
+    pad = (-n) % n_devices
+    if pad == 0:
+        return arrays, 0
+    return [np.concatenate([a, np.repeat(a[:1], pad, axis=0)])
+            for a in arrays], pad
+
+
+def _characterize_batched(grid, v, t_grid, patterns, retention_ms,
+                          t_rcd, t_rp, mesh):
+    d_, v_, t_ = grid.n_dimms, v.size, len(t_grid)
+    req = _required_latency_grid(grid, v, t_grid)
+
+    flat = lambda a: np.ascontiguousarray(
+        np.broadcast_to(a, (d_, v_, t_)).reshape(-1))
+    per_d = lambda a: flat(np.asarray(a, np.float64)[:, None, None])
+    inputs = [
+        req["rcd"].reshape(-1), req["rp"].reshape(-1),
+        per_d(grid.cell_sigma), per_d(grid.fail_floor), per_d(grid.vmin),
+        flat(np.asarray(v, np.float64)[None, :, None]),
+        flat(np.asarray(t_grid, np.float64)[None, None, :]),
+        flat(np.arange(d_)[:, None, None]).astype(np.int32),
+    ]
+
+    mesh = mesh_lib.make_batch_mesh() if mesh is None else mesh
+    n_devices = int(mesh.devices.size)
+    inputs, n_pad = _pad_flat(inputs, n_devices)
+    pattern_h = np.array([chips.pattern_phase(p) for p in patterns],
+                         np.float64)
+    ret = np.asarray(retention_ms, np.float64)
+    with enable_x64():
+        args = [jnp.asarray(a) for a in inputs]
+        field = jnp.asarray(grid.susceptibility.reshape(d_, FIELD_SIZE))
+        if n_devices > 1:
+            args = [jax.device_put(a, mesh_lib.batch_sharding(mesh, a.ndim))
+                    for a in args]
+            field = jax.device_put(
+                field, jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec()))
+        out = _characterize_flat(*args, field, jnp.asarray(pattern_h),
+                                 jnp.asarray(ret), np.float64(t_rcd),
+                                 np.float64(t_rp))
+        out = {k: np.asarray(a, np.float64) for k, a in out.items()}
+    if n_pad:
+        out = {k: a[:-n_pad] for k, a in out.items()}
+
+    shape3 = (d_, v_, t_)
+    return CharacterizationBatch(
+        grid.modules, np.asarray(v, np.float64),
+        np.asarray(t_grid, np.float64), tuple(patterns), ret,
+        out["frac"].reshape(shape3),
+        out["ber"].reshape(*shape3, len(patterns)),
+        out["tmin_rcd"].reshape(shape3), out["tmin_rp"].reshape(shape3),
+        out["row_map"].reshape(*shape3, chips.BANKS, -1),
+        out["line_map"].reshape(*shape3, chips.BANKS, -1),
+        out["weak"].reshape(*shape3, ret.size)[0])
+
+
+# --------------------------------------------------------------------------
+# Scalar reference implementation (the original per-DIMM Python loop)
+# --------------------------------------------------------------------------
+def _characterize_scalar(grid, v, t_grid, patterns, retention_ms,
+                         t_rcd, t_rp):
+    from repro.dram import errors
+    if grid.dimms is None:
+        raise ValueError("impl='scalar' needs a grid built from real DIMMs "
+                         "(DimmGrid.from_population / from_dimms)")
+    d_, v_, t_ = grid.n_dimms, v.size, len(t_grid)
+    ret = np.asarray(retention_ms, np.float64)
+    frac = np.zeros((d_, v_, t_))
+    ber = np.zeros((d_, v_, t_, len(patterns)))
+    tmin = {op: np.zeros((d_, v_, t_)) for op in ("rcd", "rp")}
+    row_map = np.zeros((d_, v_, t_, chips.BANKS, 256))
+    line_map = np.zeros_like(row_map)
+    weak = np.zeros((v_, t_, ret.size))
+    for di, d in enumerate(grid.dimms):
+        for ti, temp in enumerate(t_grid):
+            temp = float(temp)
+            frac[di, :, ti] = d.line_error_fraction(v, t_rcd, t_rp, temp)
+            for op in ("rcd", "rp"):
+                tmin[op][di, :, ti] = timing.platform_quantize(
+                    d.required_latency(op, v, temp))
+            for pi, p in enumerate(patterns):
+                ber[di, :, ti, pi] = d.bit_error_rate(v, t_rcd, t_rp, temp, p)
+            for vi, vv in enumerate(v):
+                row_map[di, vi, ti] = errors.error_probability_map(
+                    d, float(vv), t_rcd, t_rp, temp)
+                line_map[di, vi, ti] = errors.row_line_probs(
+                    d, float(vv), t_rcd, t_rp, temp)
+    for ti, temp in enumerate(t_grid):
+        for vi, vv in enumerate(v):
+            weak[vi, ti] = chips.expected_weak_cells(ret, float(temp),
+                                                     float(vv))
+    return CharacterizationBatch(
+        grid.modules, np.asarray(v, np.float64),
+        np.asarray(t_grid, np.float64), tuple(patterns), ret, frac, ber,
+        tmin["rcd"], tmin["rp"], row_map, line_map, weak)
+
+
+def characterize_batch(grid: DimmGrid, v_grid, t_grid=(20.0,),
+                       patterns=("0xaa",),
+                       retention_ms=RETENTION_GRID_MS,
+                       t_rcd: float = 10.0, t_rp: float = 10.0,
+                       mesh=None, impl: str = "auto") -> CharacterizationBatch:
+    """Characterize every (DIMM, voltage, temperature) of the grid at once.
+
+    The D x V x T grid flattens into one batch axis evaluated by a single
+    jit-compiled float64 call, sharded over ``mesh`` (default: a 1-D mesh
+    over all available devices — a no-op on one device).  ``impl="scalar"``
+    runs the original per-DIMM chips/errors Python loop instead (parity
+    reference and benchmark baseline).
+    """
+    v = np.atleast_1d(np.asarray(v_grid, np.float64))
+    if impl == "auto":
+        impl = "batched"
+    if impl == "scalar":
+        return _characterize_scalar(grid, v, t_grid, patterns, retention_ms,
+                                    t_rcd, t_rp)
+    if impl != "batched":
+        raise ValueError(f"unknown impl {impl!r}")
+    return _characterize_batched(grid, v, t_grid, patterns, retention_ms,
+                                 t_rcd, t_rp, mesh)

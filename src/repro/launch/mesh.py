@@ -23,6 +23,24 @@ def make_mesh(shape, axes):
                          axis_types=(axis_type.Auto,) * len(axes))
 
 
+def make_batch_mesh():
+    """1-D ``("batch",)`` mesh over every available device.
+
+    This is the mesh the batched engines shard their flat batch axis over
+    (``repro.engine.population`` flattens D x V x T into one axis and
+    splits it across devices with a ``NamedSharding``).  On a single
+    device the mesh has one slot and sharding is a transparent no-op.
+    """
+    return make_mesh((len(jax.devices()),), ("batch",))
+
+
+def batch_sharding(mesh, ndim: int = 1):
+    """``NamedSharding`` that splits the leading axis of an ``ndim``-array
+    over the ``batch`` axis of ``mesh`` and replicates the rest."""
+    spec = jax.sharding.PartitionSpec("batch", *([None] * (ndim - 1)))
+    return jax.sharding.NamedSharding(mesh, spec)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

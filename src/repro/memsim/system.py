@@ -39,7 +39,7 @@ INSTR_PER_CORE = 500e6
 class OperatingPoint:
     v_array: float = hw.VDD_NOMINAL
     v_periph: float = hw.VDD_NOMINAL
-    data_rate_mts: float = 1600.0
+    data_rate_mts: float = float(hw.DDR3L_DATA_RATE)
     timing: TimingParams | None = None     # None -> from circuit model
     # per-bank latency override for Voltron+BL: fraction of banks that keep
     # the *nominal* latency (error-free banks, Section 6.5)
@@ -62,7 +62,7 @@ class OperatingPoint:
 
     @property
     def freq_ratio(self) -> float:
-        return self.data_rate_mts / 1600.0
+        return self.data_rate_mts / hw.DDR3L_DATA_RATE
 
 
 # The baseline memory controller uses the *DDR3L standard* timings

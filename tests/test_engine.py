@@ -7,6 +7,7 @@ are differences of nearly-equal ratios), raw quantities relatively.
 """
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro import engine
 from repro.core import voltron
@@ -125,6 +126,30 @@ class TestSimulateParity:
         op1 = system.OperatingPoint(timing=TimingParams(15.0, 15.0, 37.5))
         op2 = system.OperatingPoint(timing=TimingParams(15.0, 15.0, 37.5))
         assert system.simulate(cores, op1) is system.simulate(cores, op2)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**30), fbf=st.floats(0.0, 0.9))
+def test_property_random_grid_parity(seed, fbf):
+    """Random workload subsets x random voltage grids through
+    simulate_batch match the scalar reference path."""
+    rng = np.random.default_rng(seed)
+    homog = workloads.homogeneous_workloads()
+    wls = [homog[i] for i in
+           rng.choice(len(homog), size=3, replace=False)]
+    vs = np.round(rng.uniform(0.9, 1.35, size=2), 3)
+    wb = engine.WorkloadBatch.from_workloads(wls)
+    r = engine.simulate_batch(wb, engine.PointGrid.from_voltages(vs, fbf))
+    for wi, (_, cores) in enumerate(wls):
+        for pi, v in enumerate(vs):
+            s = system.simulate_scalar(
+                cores, system.voltron_point(float(v), fast_bank_frac=fbf))
+            np.testing.assert_allclose(r.ipc[wi, pi], s.ipc, rtol=REL)
+            np.testing.assert_allclose(r.ws[wi, pi], s.ws, rtol=REL)
+            np.testing.assert_allclose(r.power["system_w"][wi, pi],
+                                       s.power.system_w, rtol=REL)
+            np.testing.assert_allclose(r.energy["system_j"][wi, pi],
+                                       s.energy_j["system"], rtol=REL)
 
 
 class TestControllerParity:

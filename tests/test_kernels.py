@@ -6,6 +6,9 @@ import pytest
 
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.ssd_scan import ops as ssd_ops
+from repro.kernels.sweep_solve import kernel as sweep_kernel
+from repro.kernels.sweep_solve import ops as sweep_ops
+from repro.kernels.voltage_inject import ops as inject_ops
 from repro.models.ssm import ssd_ref
 
 FA_CASES = [
@@ -47,6 +50,120 @@ def test_flash_attention_decode_shape():
                                  impl="pallas_interpret", bq=1, bk=64)
     np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
                                atol=2e-5, rtol=2e-5)
+
+
+def _solve_args(b, c, seed=0):
+    """Random-but-benign solve inputs for a [B, C] sample batch."""
+    rng = np.random.default_rng(seed)
+    f32 = lambda x: jnp.asarray(x, jnp.float32)
+    return (f32(rng.uniform(0.5, 40.0, (b, c))),        # mpki
+            f32(rng.uniform(0.8, 3.0, (b, c))),         # ipc_base
+            f32(rng.uniform(1.0, 3.0, (b, c))),         # mlp
+            f32(rng.uniform(0.2, 0.95, (b,))),          # row_hit
+            f32(rng.uniform(1.0, 8.0, (b,))),           # eff_banks
+            f32(rng.uniform(1.0, 1.5, (b,))),           # write_mult
+            f32(rng.uniform(10.0, 22.0, (b,))),         # t_rcd
+            f32(rng.uniform(10.0, 22.0, (b,))),         # t_rp
+            f32(rng.uniform(30.0, 50.0, (b,))),         # t_ras
+            f32(rng.uniform(4.0, 8.0, (b,))),           # transfer_ns
+            f32(rng.uniform(15.0, 30.0, (b,))))         # peak_bw_gbps
+
+
+class TestSweepSolveEdges:
+    """Interpret-mode edge cases of the packed-feature batch layout."""
+
+    @pytest.mark.parametrize("b", [1, 5, 13])
+    def test_batch_not_multiple_of_row_block(self, b):
+        """W*P that does not tile the 8-row packing (and the W=P=1 case,
+        b=1) pads with benign rows that must not leak into results."""
+        args = _solve_args(b, 4, seed=b)
+        ref = sweep_ops.solve(*args, impl="reference")
+        pal = sweep_ops.solve(*args, impl="pallas_interpret")
+        for k in ref:
+            assert np.isfinite(np.asarray(pal[k])).all(), k
+            np.testing.assert_allclose(np.asarray(pal[k]),
+                                       np.asarray(ref[k]), rtol=1e-6,
+                                       err_msg=k)
+
+    def test_single_core(self):
+        """C=1 workloads (the alone-IPC solve path)."""
+        args = _solve_args(6, 1, seed=42)
+        ref = sweep_ops.solve(*args, impl="reference")
+        pal = sweep_ops.solve(*args, impl="pallas_interpret")
+        np.testing.assert_allclose(np.asarray(pal["ipc"]),
+                                   np.asarray(ref["ipc"]), rtol=1e-6)
+
+    def test_pack_features_pads_to_lane_block(self):
+        feat = sweep_ops.pack_features(*_solve_args(5, 4))
+        assert feat.shape == (8, sweep_kernel.LANES)       # 5 -> ROW_BLOCK
+        # benign pad rows keep the fixed point stable (no NaN/inf)
+        out = sweep_kernel.solve_pallas(feat, 4, interpret=True)
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_solve_rejects_unknown_impl(self):
+        with pytest.raises(ValueError):
+            sweep_ops.solve(*_solve_args(2, 4), impl="banana")
+
+    def test_solve_pallas_rejects_untiled_shape(self):
+        with pytest.raises(ValueError):
+            sweep_kernel.solve_pallas(jnp.zeros((5, 128), jnp.float32), 4)
+        with pytest.raises(ValueError):
+            sweep_kernel.solve_pallas(jnp.zeros((8, 64), jnp.float32), 4)
+
+    def test_empty_candidate_fallback_to_nominal(self):
+        """Algorithm 1 with an unreachable loss target selects the 1.35 V
+        fallback in every interval, in both controller implementations."""
+        from repro.core import voltron
+        from repro.memsim import workloads
+        name, cores = workloads.homogeneous_workloads()[0]
+        runs = {impl: voltron.run_controller(name, cores, -1e6,
+                                             n_intervals=3, impl=impl)
+                for impl in ("engine", "scalar")}
+        for impl, r in runs.items():
+            assert (r.selected_voltages == 1.35).all(), impl
+        np.testing.assert_array_equal(runs["engine"].selected_voltages,
+                                      runs["scalar"].selected_voltages)
+
+
+class TestVoltageInjectEdges:
+    def test_full_probability_corrupts_every_word(self):
+        """row_prob=1: every word takes the plane-AND flip mask exactly."""
+        data = jnp.zeros((8, 1024), jnp.uint32)
+        prob = jnp.ones((8,), jnp.float32)
+        rw = jax.random.bits(jax.random.key(0), (8, 1024), dtype=jnp.uint32)
+        pls = jax.random.bits(jax.random.key(1), (1, 8, 1024),
+                              dtype=jnp.uint32)
+        ref = inject_ops.inject(data, prob, rw, pls, impl="reference")
+        pal = inject_ops.inject(data, prob, rw, pls,
+                                impl="pallas_interpret")
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(pls[0]))
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))
+
+    def test_single_plane_density(self):
+        """nplanes=1 flips ~half the bits of corrupted words."""
+        data = jnp.zeros((8, 1024), jnp.uint32)
+        prob = jnp.ones((8,), jnp.float32)
+        rw = jax.random.bits(jax.random.key(2), (8, 1024), dtype=jnp.uint32)
+        pls = jax.random.bits(jax.random.key(3), (1, 8, 1024),
+                              dtype=jnp.uint32)
+        out = np.asarray(inject_ops.inject(data, prob, rw, pls,
+                                           impl="reference"))
+        density = np.unpackbits(out.view(np.uint8)).mean()
+        assert 0.45 < density < 0.55
+
+    def test_pallas_rejects_untiled_shape(self):
+        data = jnp.zeros((7, 1024), jnp.uint32)
+        prob = jnp.zeros((7,), jnp.float32)
+        rw = jnp.zeros((7, 1024), jnp.uint32)
+        pls = jnp.zeros((1, 7, 1024), jnp.uint32)
+        with pytest.raises(ValueError):
+            inject_ops.inject(data, prob, rw, pls, impl="pallas_interpret")
+
+    def test_inject_rejects_unknown_impl(self):
+        data = jnp.zeros((8, 1024), jnp.uint32)
+        with pytest.raises(ValueError):
+            inject_ops.inject(data, jnp.zeros((8,), jnp.float32), data,
+                              data[None], impl="banana")
 
 
 SSD_CASES = [

@@ -73,6 +73,7 @@ def test_zero1_adds_data_axis():
 MULTIDEV_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["JAX_PLATFORMS"] = "cpu"   # skip the libtpu probe/timeout
     import jax, jax.numpy as jnp, numpy as np, sys
     sys.path.insert(0, "src")
     from repro.configs import base
@@ -113,7 +114,9 @@ def test_multidevice_train_and_decode_run():
     """8 host devices, (4 data x 2 model) mesh: compile AND execute a real
     sharded train step + compile a decode step."""
     env = dict(os.environ)
-    env.pop("JAX_PLATFORMS", None)
+    # host-device tests run on the forced-CPU backend; probing a (absent)
+    # TPU through libtpu first wastes minutes per subprocess
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run([sys.executable, "-c", MULTIDEV_SCRIPT],
                          capture_output=True, text=True, timeout=600,
                          cwd=os.path.dirname(os.path.dirname(__file__)),
@@ -126,7 +129,9 @@ def test_dryrun_production_cell():
     """One real production-mesh (16x16=256 devices) dry-run cell end-to-end
     via the launcher (compile + roofline extraction)."""
     env = dict(os.environ)
-    env.pop("JAX_PLATFORMS", None)
+    # host-device tests run on the forced-CPU backend; probing a (absent)
+    # TPU through libtpu first wastes minutes per subprocess
+    env["JAX_PLATFORMS"] = "cpu"
     repo = os.path.dirname(os.path.dirname(__file__))
     import shutil
     shutil.rmtree(os.path.join(repo, "artifacts/test_dryrun"),
