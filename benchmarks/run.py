@@ -15,10 +15,11 @@ import time
 
 def main() -> None:
     from benchmarks import (engine_bench, kernel_bench, paper_figures,
-                            population_bench, roofline_report)
+                            population_bench, roofline_report, test1_bench)
     pattern = sys.argv[1] if len(sys.argv) > 1 else ""
     fns = list(paper_figures.ALL) + [engine_bench.engine_sweep,
                                      population_bench.population_sweep,
+                                     test1_bench.test1_sweep,
                                      kernel_bench.kernels,
                                      roofline_report.roofline]
     print("name,us_per_call,derived")

@@ -1,0 +1,113 @@
+"""Batched Test-1 throughput vs the per-bank scalar loop.
+
+The acceptance benchmark for folding Test 1 onto the batched engine: a
+D x voltage x pattern-group x round stress sweep plus the Section 4.2
+latency grid search, through the original per-operating-point Python loop
+(``engine.test1.run_batch(..., impl="scalar")`` — one ``voltage_inject``
+dispatch and NumPy popcount per bank per point) versus one jit-compiled
+batched call.  Reported batched time is steady-state (compile excluded —
+the jit cache amortizes it across every later sweep in the process),
+matching the ``engine``/``population`` benchmark convention.
+
+``python -m benchmarks.test1_bench [OUT.json]`` additionally writes the
+speedup figures as a JSON artifact (``scripts/check.sh`` stores it as
+``artifacts/BENCH_test1.json`` to track the perf trajectory).
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+
+SWEEP = dict(rounds=2, rows=16, row_bytes=1024, seed=0)
+MODULES = ("A1", "B2", "C2", "C4")
+VOLTAGES = (1.30, 1.25, 1.20, 1.15, 1.10)
+
+
+def _measure() -> dict:
+    from repro import engine
+    from repro.engine import test1
+
+    grid = engine.DimmGrid.from_population(MODULES)
+    v = np.asarray(VOLTAGES)
+
+    t0 = time.time()
+    scalar = test1.run_batch(grid, v, impl="scalar", **SWEEP)
+    scalar_s = time.time() - t0
+
+    t0 = time.time()
+    batched = test1.run_batch(grid, v, **SWEEP)         # compile + run
+    compile_s = time.time() - t0
+    reps = 3
+    t0 = time.time()
+    for _ in range(reps):
+        batched = test1.run_batch(grid, v, **SWEEP)
+    batched_s = (time.time() - t0) / reps
+
+    exact = all(
+        (getattr(batched, f) == getattr(scalar, f)).all()
+        for f in ("bit_errors", "erroneous_lines", "error_rows"))
+
+    t0 = time.time()
+    fm_scalar = test1.find_min_latency_batch(grid, v, impl="scalar")
+    fm_scalar_s = time.time() - t0
+    test1.find_min_latency_batch(grid, v)               # compile
+    t0 = time.time()
+    for _ in range(reps):
+        fm_batched = test1.find_min_latency_batch(grid, v)
+    fm_batched_s = (time.time() - t0) / reps
+    fm_exact = bool(np.array_equal(fm_scalar, fm_batched, equal_nan=True))
+
+    n = grid.n_dimms * v.size * 3 * SWEEP["rounds"]
+    return {
+        "n_points": n,
+        "scalar_s": scalar_s,
+        "batched_s": batched_s,
+        "compile_s": compile_s,
+        "speedup": scalar_s / batched_s,
+        "bit_exact": bool(exact),
+        "min_latency_scalar_s": fm_scalar_s,
+        "min_latency_batched_s": fm_batched_s,
+        "min_latency_speedup": fm_scalar_s / fm_batched_s,
+        "min_latency_exact": fm_exact,
+    }
+
+
+def test1_sweep():
+    m = _measure()
+    return [
+        ("test1/stress_sweep/scalar",
+         f"{m['scalar_s'] * 1e3:.0f}ms for {m['n_points']} (D,V,pat,round) "
+         "points",
+         f"{m['scalar_s'] / m['n_points'] * 1e6:.0f}us/point"),
+        ("test1/stress_sweep/batched",
+         f"{m['batched_s'] * 1e3:.1f}ms for {m['n_points']} points",
+         f"speedup={m['speedup']:.0f}x (target >=20x) "
+         f"bit_exact={m['bit_exact']} "
+         f"first_call={m['compile_s']:.2f}s incl compile"),
+        ("test1/min_latency_search/batched",
+         f"{m['min_latency_batched_s'] * 1e3:.1f}ms vs scalar "
+         f"{m['min_latency_scalar_s'] * 1e3:.0f}ms",
+         f"speedup={m['min_latency_speedup']:.0f}x "
+         f"parity_exact={m['min_latency_exact']}"),
+    ]
+
+
+def main() -> None:
+    m = _measure()
+    print(json.dumps(m, indent=2))
+    if len(sys.argv) > 1:
+        with open(sys.argv[1], "w") as f:
+            json.dump(m, f, indent=2)
+        print(f"wrote {sys.argv[1]}", file=sys.stderr)
+    if not (m["bit_exact"] and m["min_latency_exact"]):
+        sys.exit(1)
+    if m["speedup"] < 20:
+        print(f"WARNING: speedup {m['speedup']:.1f}x below the 20x target",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -11,8 +11,10 @@
 """
 import numpy as np
 
+from repro import engine
 from repro.core import hbm_adapter, memdvfs, perf_model, voltron
-from repro.dram import chips, circuit, test1
+from repro.dram import chips, circuit
+from repro.engine import test1
 from repro.memsim import workloads
 
 
@@ -21,12 +23,17 @@ def main():
     d = [x for x in chips.population() if x.module == "C2"][0]
     print(f"DIMM {d.module} (vendor {d.vendor}): V_min = "
           f"{chips.measured_vmin(d)} V (Table 7: {d.vmin} V)")
-    for v in [d.vmin, d.vmin - 0.05]:
-        r = test1.run(d, v, rows=32)
+    grid = engine.DimmGrid.from_population(("C2",))
+    voltages = [d.vmin, d.vmin - 0.05]
+    # the whole voltage sweep is one batched jit call on the engine
+    res = test1.run_batch(grid, voltages, rows=32)
+    for vi, v in enumerate(voltages):
         print(f"  Test 1 @ {v:.3f} V, 10ns latencies: "
-              f"{r.erroneous_lines}/{r.total_lines} erroneous lines")
-    fix = test1.find_min_latency(d, d.vmin - 0.025)
-    print(f"  errors at {d.vmin - 0.025:.3f} V eliminated by tRCD/tRP = {fix}")
+              f"{res.erroneous_lines[0, vi, 0, 0]}/{res.total_lines} "
+              "erroneous lines")
+    fix = test1.find_min_latency_batch(grid, [d.vmin - 0.025])[0, 0]
+    print(f"  errors at {d.vmin - 0.025:.3f} V eliminated by tRCD/tRP = "
+          f"({fix[0]}, {fix[1]})")
     t3 = circuit.table3(1.0)
     print(f"  circuit model @1.0 V: tRCD={t3['rcd'][0]} tRP={t3['rp'][0]} "
           f"tRAS={t3['ras'][0]} (paper Table 3: 17.5/18.75/45.0)")

@@ -10,3 +10,9 @@ python -m pytest -x -q "$@"
 # fast smoke: the Voltron-vs-MemDVFS controller figure through the batched
 # engine (run.py exits nonzero if the figure function fails)
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run fig14
+
+# perf-trajectory artifact: batched Test-1 speedup vs the per-bank scalar
+# loop (exits nonzero if parity breaks)
+mkdir -p artifacts
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.test1_bench artifacts/BENCH_test1.json

@@ -19,6 +19,12 @@ Batching axes
   carries the selected voltage per workload through one ``lax.scan``).
 - **D** — DIMMs (``DimmGrid``: stacked Table 7 identities with the derived
   per-DIMM latency scale, cell sigma and susceptibility field).
+- **D x V x P x R** — the Test-1 stress sweep (``test1.run_batch``: DIMMs x
+  voltages x data-pattern groups x rounds, flattened into one batch axis;
+  per-element PRNG key data and word-corruption probabilities ride the flat
+  axis, the [P, 2] pattern words stay replicated, and the bit injection is
+  a single ``voltage_inject`` dispatch over the flattened
+  [N * banks * rows, words] plane).
 
 The flat batch-axis convention
 ==============================
@@ -50,10 +56,13 @@ as ``system.simulate_scalar`` and is what the parity tests compare against),
 and ``core.voltron.run_controller`` is ``run_suite`` with one workload.
 The characterization path keeps its reference as
 ``characterize_batch(..., impl="scalar")`` — the original per-DIMM
-chips/errors loop.  Results match the scalar paths to float32 tolerance
-(system sweep) / 1e-6 (characterization, float64 end to end); shapes and
-dataclass fields are unchanged.
+chips/errors loop — and the Test-1 path as
+``test1.run_batch(..., impl="scalar")`` — a loop over ``dram.test1.run``.
+Results match the scalar paths to float32 tolerance (system sweep) / 1e-6
+(characterization, float64 end to end) / bit-exactly (Test-1 error counts,
+same PRNG keys); shapes and dataclass fields are unchanged.
 """
+from repro.engine import test1  # noqa: F401
 from repro.engine.batch import PointGrid, WorkloadBatch  # noqa: F401
 from repro.engine.controller import (ControllerBatchResult,  # noqa: F401
                                      run_batched)
@@ -61,3 +70,4 @@ from repro.engine.population import (CharacterizationBatch,  # noqa: F401
                                      DimmGrid, characterize_batch)
 from repro.engine.solve import (BatchResult, ComparisonBatch,  # noqa: F401
                                 evaluate_batch, simulate_batch)
+from repro.engine.test1 import Test1Batch  # noqa: F401

@@ -163,28 +163,40 @@ class CharacterizationBatch:
 # --------------------------------------------------------------------------
 # Batched implementation
 # --------------------------------------------------------------------------
-def _required_latency_grid(grid: DimmGrid, v, t_grid) -> dict:
-    """Mean required raw latency per (DIMM, voltage, temperature), ns.
+def required_latency32(grid: DimmGrid, v, temp_c: float) -> dict:
+    """float32 [D, V] mean required raw latency per op at one temperature.
 
-    One eager vectorized circuit call per (op, vendor, temperature) — no
-    per-DIMM loop — producing values bitwise-equal to
-    ``DIMM.required_latency`` (same function, same input vector)."""
-    req = {op: np.zeros((grid.n_dimms, v.size, len(t_grid)))
-           for op in ("rcd", "rp")}
+    One eager vectorized circuit call per (op, vendor) — no per-DIMM loop.
+    ``DIMM.required_latency`` multiplies the float32 circuit output by a
+    Python-float scale, which numpy keeps in float32 — this reproduces that
+    rounding, so the values are bitwise-equal to the scalar method (same
+    function, same input vector).  Shared by ``characterize_batch`` and the
+    batched Test 1 (``repro.engine.test1``), which both depend on the exact
+    float32 threshold convention."""
     vendors = sorted(set(grid.vendors))
     sel = {vd: np.asarray([i for i, x in enumerate(grid.vendors) if x == vd])
            for vd in vendors}
-    # DIMM.required_latency multiplies the float32 circuit output by a
-    # Python-float scale, which numpy keeps in float32 — reproduce that
-    # rounding so the batched path is value-identical (the f64 req array
-    # holds exactly-representable f32 values).
     scale32 = grid.latency_scale.astype(np.float32)
+    req = {}
     for op in ("rcd", "rp"):
-        for ti, temp in enumerate(t_grid):
-            for vd in vendors:
-                raw = _vendor_raw_cached(op, vd, float(temp), v.tobytes())
-                req[op][sel[vd], :, ti] = \
-                    raw[None, :] * scale32[sel[vd], None]
+        r32 = np.zeros((grid.n_dimms, v.size), np.float32)
+        for vd in vendors:
+            raw = _vendor_raw_cached(op, vd, float(temp_c), v.tobytes())
+            r32[sel[vd]] = raw[None, :] * scale32[sel[vd], None]
+        req[op] = r32
+    return req
+
+
+def _required_latency_grid(grid: DimmGrid, v, t_grid) -> dict:
+    """Mean required raw latency per (DIMM, voltage, temperature), ns —
+    ``required_latency32`` stacked over the temperature grid (the f64
+    arrays hold exactly-representable f32 values)."""
+    req = {op: np.zeros((grid.n_dimms, v.size, len(t_grid)))
+           for op in ("rcd", "rp")}
+    for ti, temp in enumerate(t_grid):
+        r32 = required_latency32(grid, v, float(temp))
+        for op in ("rcd", "rp"):
+            req[op][:, :, ti] = r32[op]
     return req
 
 

@@ -151,13 +151,31 @@ class TestVoltageInjectEdges:
         density = np.unpackbits(out.view(np.uint8)).mean()
         assert 0.45 < density < 0.55
 
-    def test_pallas_rejects_untiled_shape(self):
+    def test_raw_kernel_rejects_untiled_shape(self):
+        """The bare kernel still demands tile-aligned planes; only the
+        dispatch wrapper pads (test_untiled_shapes_pad_and_slice below)."""
+        from repro.kernels.voltage_inject import kernel as inject_kernel
         data = jnp.zeros((7, 1024), jnp.uint32)
-        prob = jnp.zeros((7,), jnp.float32)
-        rw = jnp.zeros((7, 1024), jnp.uint32)
-        pls = jnp.zeros((1, 7, 1024), jnp.uint32)
         with pytest.raises(ValueError):
-            inject_ops.inject(data, prob, rw, pls, impl="pallas_interpret")
+            inject_kernel.inject_pallas(data, jnp.zeros((7,), jnp.float32),
+                                        data, data[None], interpret=True)
+
+    @pytest.mark.parametrize("shape", [(7, 1024), (8, 512), (12, 640)])
+    def test_untiled_shapes_pad_and_slice(self, shape):
+        """Reduced geometries (2 KiB rows = 512 words, odd row counts) run
+        through the Pallas path via pad-and-slice, bit-identical to the
+        oracle."""
+        rows, words = shape
+        data = jax.random.bits(jax.random.key(10), shape, dtype=jnp.uint32)
+        prob = jax.random.uniform(jax.random.key(11), (rows,), jnp.float32,
+                                  0, 1)
+        rw = jax.random.bits(jax.random.key(12), shape, dtype=jnp.uint32)
+        pls = jax.random.bits(jax.random.key(13), (2, *shape),
+                              dtype=jnp.uint32)
+        ref = inject_ops.inject(data, prob, rw, pls, impl="reference")
+        pal = inject_ops.inject(data, prob, rw, pls, impl="pallas_interpret")
+        assert pal.shape == shape
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))
 
     def test_inject_rejects_unknown_impl(self):
         data = jnp.zeros((8, 1024), jnp.uint32)
