@@ -1,0 +1,246 @@
+"""Shape-stable dispatch throughput: bucketed AOT reuse vs retrace-per-shape,
+plus the chunked Test-1 megabatch.
+
+Two acceptance measurements for the dispatch layer
+(:mod:`repro.engine.dispatch`):
+
+1. **Randomized request stream** — >= 20 distinct (D, V) characterization
+   grid shapes.  The direct path retraces ``_characterize_flat`` for every
+   new shape (today's behavior); the bucketed path pads each request to a
+   canonical bucket and reuses a warm AOT executable, so its retrace count
+   is bounded by the bucket ladder, not the stream.  Reported:
+   steady-state points/s for both, the speedup (target >= 5x), and the
+   retrace counts (dispatch target: <= number of buckets).
+
+2. **Chunked megabatch** — a Test-1 stress sweep at >= 8x the 120-point
+   seed sweep of ``BENCH_test1.json``, streamed through ``lax.map`` chunks
+   under an explicit ``max_elements_resident`` budget.  Bit-exactness is
+   asserted against the direct (fully resident) call; the peak-memory
+   proxy is the max resident flat-batch size (chunk vs N).
+
+``python -m benchmarks.dispatch_bench [OUT.json]`` writes the metrics as a
+JSON artifact (``scripts/check.sh`` stores it as
+``artifacts/BENCH_dispatch.json`` and gates regressions against the
+committed baseline).
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+
+N_SHAPES = 24
+MEGA = dict(rounds=4, rows=16, row_bytes=1024, seed=0)   # 8 D x 10 V x 3 P
+MEGA_VOLTAGES = np.round(np.linspace(1.30, 1.075, 10), 4)
+MEGA_MODULES = ("A1", "A3", "B1", "B2", "B5", "C1", "C2", "C4")
+MEGA_BUDGET = 1 << 24        # element-cost units -> 64-element chunks
+
+
+def _shape_stream(rng, grid):
+    """>= N_SHAPES distinct (module subset, voltage grid) request shapes."""
+    from repro.engine.population import SWEEP_VOLTAGES
+    seen, stream = set(), []
+    while len(stream) < N_SHAPES:
+        d = int(rng.integers(2, 32))
+        v = int(rng.integers(2, SWEEP_VOLTAGES.size + 1))
+        if (d, v) in seen:
+            continue
+        seen.add((d, v))
+        mods = tuple(np.asarray(grid.modules)[
+            rng.choice(grid.n_dimms, size=d, replace=False)])
+        stream.append((mods, SWEEP_VOLTAGES[:v]))
+    return stream
+
+
+def _measure_stream() -> dict:
+    from repro import engine
+    from repro.engine import dispatch, population
+
+    grid = engine.DimmGrid.from_population()
+    stream = _shape_stream(np.random.default_rng(0), grid)
+    n_points = sum(len(m) * v.size for m, v in stream)
+
+    # -- bucketed: warm the ladder on the first pass, then steady state ----
+    # (measured FIRST, on a fresh heap: the direct pass's compile storm
+    # below leaves allocator/cache state that inflates later measurements
+    # by up to 2x across processes — gate metrics must not absorb that)
+    dispatch.clear_cache()
+    dispatch.reset_stats()
+    t0 = time.time()
+    for mods, v in stream:
+        engine.characterize_batch(grid.select(mods), v)
+    warmup_s = time.time() - t0
+    compiles = dispatch.stats("characterize")["compiles"]
+    n_buckets = len(dispatch.bucket_ladder())
+
+    # The gated regression metric is steady-dispatch vs scalar us/point.
+    # Both sides are steady-state seconds-scale measurements, so the ratio
+    # survives hardware differences between the baseline machine and CI —
+    # and each scalar probe (the original chips/errors loop on 32 points)
+    # is *paired* with a steady stream pass in the same time window, so
+    # slow machine-state drift (thermal / cgroup throttling) hits both
+    # sides of a pair equally and cancels in the ratio.
+    probe_mods = ("A1", "B2", "C2", "C4")
+    probe_v = population.SWEEP_VOLTAGES[:8]
+    probe_n = len(probe_mods) * probe_v.size
+    steady_s, scalar_probe_s, ratios = np.inf, np.inf, []
+    for _ in range(3):
+        t0 = time.time()
+        engine.characterize_batch(grid.select(probe_mods), probe_v,
+                                  impl="scalar")
+        s_i = time.time() - t0
+        t0 = time.time()
+        for mods, v in stream:
+            engine.characterize_batch(grid.select(mods), v)
+        d_i = time.time() - t0
+        steady_s = min(steady_s, d_i)
+        scalar_probe_s = min(scalar_probe_s, s_i)
+        ratios.append((s_i / probe_n) / (d_i / n_points))
+    scalar_us_point = scalar_probe_s / probe_n * 1e6
+    dispatch_us_point = steady_s / n_points * 1e6
+
+    # -- direct: one retrace per fresh grid shape (the old steady state) ---
+    # "today" had neither the persistent disk cache nor warm in-process
+    # executables, so the direct pass runs with the disk cache fully
+    # disabled (config off + the latched cache object reset) and every
+    # in-process jit/lowering cache dropped — otherwise warm caches hide
+    # the very retrace cost this benchmark quantifies.  The dispatched
+    # side's AOT executables live in dispatch's own table and are
+    # deliberately untouched by jax.clear_caches().
+    import jax
+    try:
+        # private API: without it the direct pass may read a warm disk
+        # cache and *understate* the retrace cost — degrade, don't crash
+        from jax._src.compilation_cache import reset_cache
+    except ImportError:
+        reset_cache = lambda: None
+    # same degrade-don't-crash treatment for the jit-cache-size probe (the
+    # retrace count is informational; 0 just means "probe unavailable")
+    cache_size = getattr(population._characterize_flat, "_cache_size",
+                         lambda: 0)
+    cache_dir = jax.config.jax_compilation_cache_dir
+    direct_s, direct_retraces = np.inf, 0
+    try:
+        jax.config.update("jax_compilation_cache_dir", None)
+        for _ in range(2):              # best-of-2: compile time is noisy
+            jax.clear_caches()
+            reset_cache()
+            cache0 = cache_size()
+            t0 = time.time()
+            for mods, v in stream:
+                engine.characterize_batch(grid.select(mods), v,
+                                          dispatch="direct")
+            direct_s = min(direct_s, time.time() - t0)
+            direct_retraces = cache_size() - cache0
+    finally:
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        reset_cache()
+
+    return {
+        "n_requests": len(stream),
+        "n_points": n_points,
+        "direct_s": direct_s,
+        "direct_retraces": int(direct_retraces),
+        "dispatch_warmup_s": warmup_s,
+        "dispatch_steady_s": steady_s,
+        "dispatch_retraces": int(compiles),
+        "n_buckets": n_buckets,
+        "points_per_s_direct": n_points / direct_s,
+        "points_per_s_dispatch": n_points / steady_s,
+        "stream_speedup": direct_s / steady_s,
+        "scalar_us_per_point": scalar_us_point,
+        "dispatch_us_per_point": dispatch_us_point,
+        "steady_speedup_vs_scalar": max(ratios),
+    }
+
+
+def _measure_megabatch() -> dict:
+    from repro import engine
+    from repro.engine import dispatch, test1
+
+    grid = engine.DimmGrid.from_population(MEGA_MODULES)
+    v = MEGA_VOLTAGES
+    n = grid.n_dimms * v.size * 3 * MEGA["rounds"]
+
+    t0 = time.time()
+    direct = test1.run_batch(grid, v, dispatch="direct", **MEGA)
+    direct_s = time.time() - t0
+
+    dispatch.reset_stats()
+    t0 = time.time()
+    chunked = test1.run_batch(grid, v, dispatch="chunked",
+                              max_elements_resident=MEGA_BUDGET, **MEGA)
+    chunked_s = time.time() - t0
+    stats = dispatch.stats("test1/chunked")
+    exact = all((getattr(chunked, f) == getattr(direct, f)).all()
+                for f in ("bit_errors", "erroneous_lines", "error_rows"))
+
+    return {
+        "n_points": n,
+        "scale_vs_seed_sweep": n / 120.0,
+        "budget_elements": MEGA_BUDGET,
+        "chunk": int(stats["max_resident"]),
+        "max_resident_direct": n,
+        "max_resident_chunked": int(stats["max_resident"]),
+        "direct_s": direct_s,
+        "chunked_s": chunked_s,
+        "bit_exact": bool(exact),
+    }
+
+
+def _measure() -> dict:
+    m = {"stream": _measure_stream(), "megabatch": _measure_megabatch()}
+    # flat steady-state keys for the regression gate
+    m["steady_points_per_s"] = m["stream"]["points_per_s_dispatch"]
+    m["steady_s"] = m["stream"]["dispatch_steady_s"]
+    m["compile_s"] = m["stream"]["dispatch_warmup_s"]
+    return m
+
+
+def dispatch_sweep():
+    m = _measure()
+    s, g = m["stream"], m["megabatch"]
+    return [
+        ("dispatch/shape_stream/direct",
+         f"{s['direct_s'] * 1e3:.0f}ms for {s['n_requests']} shapes "
+         f"({s['n_points']} points)",
+         f"{s['direct_retraces']} retraces, "
+         f"{s['points_per_s_direct']:.0f} pts/s"),
+        ("dispatch/shape_stream/bucketed",
+         f"{s['dispatch_steady_s'] * 1e3:.0f}ms steady",
+         f"speedup={s['stream_speedup']:.0f}x (target >=5x) "
+         f"retraces={s['dispatch_retraces']}<= buckets={s['n_buckets']} "
+         f"{s['points_per_s_dispatch']:.0f} pts/s"),
+        ("dispatch/test1_megabatch/chunked",
+         f"{g['chunked_s'] * 1e3:.0f}ms for {g['n_points']} points "
+         f"({g['scale_vs_seed_sweep']:.0f}x seed sweep)",
+         f"chunk={g['chunk']} (vs {g['max_resident_direct']} resident "
+         f"direct) bit_exact={g['bit_exact']}"),
+    ]
+
+# separates compile/steady internally; the harness must not run it twice
+dispatch_sweep.self_timed = True
+
+
+def main() -> None:
+    from repro.engine import dispatch
+    dispatch.enable_persistent_cache()
+    m = _measure()
+    print(json.dumps(m, indent=2))
+    if len(sys.argv) > 1:
+        with open(sys.argv[1], "w") as f:
+            json.dump(m, f, indent=2)
+        print(f"wrote {sys.argv[1]}", file=sys.stderr)
+    ok = (m["stream"]["stream_speedup"] >= 5.0
+          and m["stream"]["dispatch_retraces"] <= m["stream"]["n_buckets"]
+          and m["megabatch"]["bit_exact"]
+          and m["megabatch"]["scale_vs_seed_sweep"] >= 8.0)
+    if not ok:
+        print("ACCEPTANCE FAILURE", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

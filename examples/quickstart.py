@@ -65,6 +65,13 @@ def main():
               f"(slowdown {pred.slowdown_pct:.1f}%, "
               f"chip energy {pred.chip_energy_savings_pct:+.1f}%)")
 
+    stats = engine.dispatch.stats()
+    total = {k: sum(s[k] for s in stats.values())
+             for k in ("calls", "compiles", "hits")}
+    print(f"\n[dispatch] {total['calls']} engine calls across "
+          f"{len(stats)} entry points -> {total['compiles']} compiles, "
+          f"{total['hits']} warm-executable hits (shape-stable buckets)")
+
 
 if __name__ == "__main__":
     main()

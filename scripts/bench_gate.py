@@ -1,0 +1,100 @@
+"""Benchmark regression gate: fresh ``artifacts/BENCH_*.json`` vs the
+committed baselines in ``benchmarks/baselines/``.
+
+  python scripts/bench_gate.py [artifacts_dir] [baselines_dir]
+
+Each spec names the steady-state metrics that gate merges (compile time is
+deliberately *not* gated — the dispatch layer trades one-time compiles for
+steady throughput).  A metric regressing by more than ``TOLERANCE`` (30%)
+fails the check; missing files (first run on a machine, benchmark not
+executed) are reported and skipped so partial runs stay usable.
+
+Baseline convention: regenerate ``benchmarks/baselines/BENCH_*.json`` by
+copying the artifacts of a full ``scripts/check.sh`` run — the benches
+there execute right after the test suite, and baselines captured in the
+same machine state keep systematic load bias out of the comparison.  When
+several runs disagree, commit the run with the *lowest* gated ratios: the
+gate then fires only below the worst legitimately-observed performance,
+not on ordinary jitter (the scalar/XLA speedup ratio stresses interpreter
+and compiled subsystems differently, so its spread is real).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+TOLERANCE = 0.30
+
+# metric -> direction ("lower" = seconds/count-like, "higher" =
+# throughput-like).  Gated metrics must survive hardware differences
+# between the baseline machine and CI runners, so they are either
+# same-machine throughput *ratios* over multi-second windows (test1
+# "speedup": the batched sweep vs the scalar loop — a steady-state
+# regression in the batched path shows up directly as a ratio loss) or
+# *deterministic counters* (dispatch "stream.dispatch_retraces": compiles
+# on the randomized shape stream, bounded by the bucket ladder — any
+# growth means shape-stability regressed).  Absolute seconds and
+# sub-second ratios (steady_speedup_vs_scalar, stream_speedup) are
+# reported in the artifacts for trajectory tracking but not gated: their
+# run-to-run noise on throttled runners exceeds the 30% band.
+SPECS = {
+    "BENCH_test1.json": {
+        "speedup": "higher",
+    },
+    "BENCH_dispatch.json": {
+        "stream.dispatch_retraces": "lower",
+    },
+}
+
+
+def _get(doc: dict, dotted: str):
+    for part in dotted.split("."):
+        doc = doc[part]
+    return float(doc)
+
+
+def check(artifacts: str, baselines: str) -> int:
+    failures = 0
+    for fname, metrics in SPECS.items():
+        fresh_p = os.path.join(artifacts, fname)
+        base_p = os.path.join(baselines, fname)
+        if not os.path.exists(base_p):
+            print(f"[bench-gate] SKIP {fname}: no committed baseline")
+            continue
+        if not os.path.exists(fresh_p):
+            print(f"[bench-gate] SKIP {fname}: no fresh artifact")
+            continue
+        with open(fresh_p) as f:
+            fresh = json.load(f)
+        with open(base_p) as f:
+            base = json.load(f)
+        for metric, direction in metrics.items():
+            try:
+                f_v, b_v = _get(fresh, metric), _get(base, metric)
+            except KeyError as e:
+                print(f"[bench-gate] SKIP {fname}:{metric}: missing {e}")
+                continue
+            ratio = (f_v / b_v) if direction == "lower" else (b_v / f_v)
+            verdict = "FAIL" if ratio > 1.0 + TOLERANCE else "ok"
+            print(f"[bench-gate] {verdict:4s} {fname}:{metric} "
+                  f"fresh={f_v:.6g} baseline={b_v:.6g} "
+                  f"({'slowdown' if direction == 'lower' else 'loss'} "
+                  f"{100 * (ratio - 1):+.1f}%, limit +{100 * TOLERANCE:.0f}%)")
+            if verdict == "FAIL":
+                failures += 1
+    if failures:
+        print(f"[bench-gate] {failures} steady-state regression(s) > "
+              f"{100 * TOLERANCE:.0f}%")
+    return failures
+
+
+def main() -> None:
+    artifacts = sys.argv[1] if len(sys.argv) > 1 else "artifacts"
+    baselines = sys.argv[2] if len(sys.argv) > 2 else \
+        os.path.join("benchmarks", "baselines")
+    sys.exit(1 if check(artifacts, baselines) else 0)
+
+
+if __name__ == "__main__":
+    main()

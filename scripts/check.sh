@@ -5,14 +5,27 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# JAX persistent compilation cache: repeated check/benchmark runs pay XLA
+# compilation once per machine (thresholds dropped so every kernel persists)
+export JAX_COMPILATION_CACHE_DIR="${JAX_COMPILATION_CACHE_DIR:-$PWD/artifacts/jax_cache}"
+export JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS=0
+export JAX_PERSISTENT_CACHE_MIN_ENTRY_SIZE_BYTES=0
+mkdir -p "$JAX_COMPILATION_CACHE_DIR"
+
 python -m pytest -x -q "$@"
 
 # fast smoke: the Voltron-vs-MemDVFS controller figure through the batched
 # engine (run.py exits nonzero if the figure function fails)
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run fig14
 
-# perf-trajectory artifact: batched Test-1 speedup vs the per-bank scalar
-# loop (exits nonzero if parity breaks)
+# perf-trajectory artifacts: batched Test-1 speedup vs the per-bank scalar
+# loop, and the shape-stable dispatch stream/megabatch acceptance (both
+# exit nonzero if parity breaks)
 mkdir -p artifacts
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.test1_bench artifacts/BENCH_test1.json
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.dispatch_bench artifacts/BENCH_dispatch.json
+
+# steady-state throughput gate vs the committed baselines (>30% fails)
+python scripts/bench_gate.py artifacts benchmarks/baselines

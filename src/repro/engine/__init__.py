@@ -43,9 +43,39 @@ Every engine entry point follows the same shape discipline:
    ``jax.sharding.NamedSharding`` over the 1-D ``("batch",)`` mesh from
    ``repro.launch.mesh.make_batch_mesh()``.  On one device the mesh has a
    single slot and sharding is skipped entirely — results are identical
-   with and without it.  Per-element constants ride along on the flat axis;
-   genuinely shared operands (the [D, F] susceptibility field) stay
-   replicated and are gathered on-device.
+   with and without it.  Per-element constants ride along on the flat
+   axis; genuinely shared operands (the [P, 2] Test-1 pattern words) stay
+   replicated.
+
+The bucketing / chunking contract
+=================================
+
+Entry points reach their kernels through :mod:`repro.engine.dispatch`
+(``dispatch="direct"`` bypasses it — the exact-shape jit call kept as the
+parity reference).  The contract:
+
+- **When callers get padding:** a flat batch of size N <= the largest
+  bucket is padded up to the smallest bucket ``n_devices * 2**k`` and runs
+  on a warm AOT-compiled executable (one compile per (entry point, bucket,
+  static config) — ``dispatch.stats()`` exposes the counters).  Results
+  are sliced back to N and are bit-exact per element: the padded lanes are
+  finite copies of lane 0 and never mix with real lanes.
+- **Mask semantics:** kernels with per-element reductions take a boolean
+  ``valid`` [N] lane mask as their last argument and must zero dead lanes
+  in every output (``test1._test1_flat_fn`` masks its counts/maps,
+  ``population._characterize_flat_fn`` its fractions).  Grid-shaped
+  kernels (``solve._grid_sim_fn``, ``controller._controller_scan_fn``)
+  reduce only over the unpadded core axis, so they pad-and-slice without
+  a mask.
+- **When callers get chunking:** a request larger than the top bucket —
+  or whose ``N * element_cost`` exceeds the ``max_elements_resident``
+  budget — streams through a ``lax.map`` over fixed-size chunks (donated
+  stacked inputs, per-chunk in-jit randomness), keeping peak memory
+  O(chunk).  Outputs are reassembled and remain bit-exact.
+- **Mesh-divisibility rule:** buckets and chunks are ``n_devices * 2**k``
+  by construction, so the ``("batch",)`` sharding of the resident axis
+  (``launch.mesh.batch_sharding`` / ``chunked_batch_sharding``) always
+  splits evenly — never re-pad a bucketed batch for the mesh.
 
 Scalar-wrapper compatibility
 ============================
@@ -62,6 +92,7 @@ Results match the scalar paths to float32 tolerance (system sweep) / 1e-6
 (characterization, float64 end to end) / bit-exactly (Test-1 error counts,
 same PRNG keys); shapes and dataclass fields are unchanged.
 """
+from repro.engine import dispatch  # noqa: F401
 from repro.engine import test1  # noqa: F401
 from repro.engine.batch import PointGrid, WorkloadBatch  # noqa: F401
 from repro.engine.controller import (ControllerBatchResult,  # noqa: F401

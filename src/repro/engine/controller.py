@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.engine import dispatch as dispatch_lib
 from repro.engine import solve as engine_solve
 from repro.engine.batch import WorkloadBatch
 from repro.kernels.sweep_solve import ops as sweep_ops
@@ -46,9 +47,8 @@ def _predict(coef_lo, coef_hi, lat, mpki, stall):
     return jnp.where(mpki < MEM_INTENSIVE_MPKI, lo, hi)
 
 
-@functools.partial(jax.jit, static_argnames=("impl",))
-def _controller_scan(feats, phases, coef_lo, coef_hi, target, cand_v,
-                     lat_feat, cand_t, impl: str = "reference"):
+def _controller_scan_fn(feats, phases, coef_lo, coef_hi, target, cand_v,
+                        lat_feat, cand_t, impl: str = "reference"):
     w, c = feats["mpki"].shape
     nominal = {k: jnp.broadcast_to(v, (w,))
                for k, v in engine_solve.NOMINAL_POINT.items()}
@@ -133,16 +133,43 @@ def _controller_scan(feats, phases, coef_lo, coef_hi, target, cand_v,
     }
 
 
+_controller_scan = jax.jit(_controller_scan_fn, static_argnames=("impl",))
+
+
+def _controller_dispatched(feats, phases, coef_lo, coef_hi, target, cand_v,
+                           lat_feat, cand_t, impl):
+    """The interval scan through the shape-stable dispatch layer: the W
+    axis (of both the features and the [T, W] phase schedule) is padded to
+    a canonical bucket so any suite size reuses a warm AOT executable; the
+    scan length T stays exact (it is the time axis, not a batch axis).
+    Padded lanes are dead workload copies sliced off before the result."""
+    w = feats["mpki"].shape[0]
+    bw = dispatch_lib.pick_bucket(w, dispatch_lib.bucket_ladder(1)) or w
+    pf = {k: jnp.asarray(dispatch_lib.pad_axis(a, bw))
+          for k, a in feats.items()}
+    ph = jnp.asarray(dispatch_lib.pad_axis(phases, bw, axis=1))
+    out = dispatch_lib.aot_call(
+        "controller_scan",
+        functools.partial(_controller_scan_fn, impl=impl),
+        (pf, ph, coef_lo, coef_hi, target, cand_v, lat_feat, cand_t),
+        statics_key=(impl,), resident=bw)
+    return {k: a[:w] for k, a in out.items()}
+
+
 def run_batched(wb: WorkloadBatch, phases: np.ndarray, coef_lo, coef_hi,
                 target_loss_pct: float, cand_v: np.ndarray,
                 lat_feat: np.ndarray, cand_timings: np.ndarray,
-                impl: str = "auto") -> ControllerBatchResult:
+                impl: str = "auto",
+                dispatch: str = "auto") -> ControllerBatchResult:
     """Run the interval loop for all W workloads in one scan.
 
     ``phases``: [T, W] per-interval memory-intensity factors.
     ``cand_v``: [K] candidate voltages, ascending, last entry = fallback.
     ``lat_feat``: [K-1] Algorithm-1 latency features of the candidates.
     ``cand_timings``: [K, 3] resolved (tRCD, tRP, tRAS) per candidate.
+    ``dispatch``: "auto" buckets the workload axis through
+    :mod:`repro.engine.dispatch`; "direct" keeps the exact-shape jit call
+    (the bucketed path's parity reference).
     """
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "reference"
@@ -150,10 +177,19 @@ def run_batched(wb: WorkloadBatch, phases: np.ndarray, coef_lo, coef_hi,
     cand_t = {"t_rcd": f32(cand_timings[:, 0]),
               "t_rp": f32(cand_timings[:, 1]),
               "t_ras": f32(cand_timings[:, 2])}
-    out = _controller_scan(engine_solve._wb_feats(wb), f32(phases),
-                           f32(coef_lo), f32(coef_hi),
-                           jnp.float32(target_loss_pct), f32(cand_v),
-                           f32(lat_feat), cand_t, impl=impl)
+    if dispatch == "direct":
+        out = _controller_scan(engine_solve._wb_feats(wb), f32(phases),
+                               f32(coef_lo), f32(coef_hi),
+                               jnp.float32(target_loss_pct), f32(cand_v),
+                               f32(lat_feat), cand_t, impl=impl)
+    elif dispatch in ("auto", "bucketed"):
+        out = _controller_dispatched(engine_solve._wb_feats(wb), f32(phases),
+                                     f32(coef_lo), f32(coef_hi),
+                                     jnp.float32(target_loss_pct),
+                                     f32(cand_v), f32(lat_feat), cand_t,
+                                     impl)
+    else:
+        raise ValueError(f"unknown dispatch {dispatch!r}")
     a = {k: np.asarray(v, np.float64) for k, v in out.items()
          if k != "selected_idx"}
     # map indices back to the exact float64 candidate voltages so the

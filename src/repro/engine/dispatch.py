@@ -1,0 +1,334 @@
+"""Shape-stable engine dispatch: bucketed padding, an AOT executable cache
+and chunked megabatch execution.
+
+Every engine entry point flattens its sweep grid into one leading batch
+axis (the package convention) — but a *jit cache keyed on exact shapes*
+means every new (D, V, T/P, R) grid retraces the kernel from scratch, and a
+single resident ``[N, ...]`` plane bounds the population size by memory
+rather than throughput.  This module gives all four entry points
+(``solve.simulate_batch``/``evaluate_batch``, ``population
+.characterize_batch``, ``test1.run_batch``, ``controller.run_batched``) one
+shared dispatch discipline:
+
+1. **Shape bucketing** — the flat batch axis is padded up to the smallest
+   canonical *bucket* (``n_devices * 2**k``, so every bucket stays divisible
+   by the ``("batch",)`` mesh) and a boolean validity mask rides along so
+   the kernels can zero the dead lanes in their reductions.  Arbitrary
+   request shapes therefore hit a warm executable: the number of distinct
+   traces is bounded by the bucket-ladder length, not the request stream.
+2. **AOT executable cache** — kernels are compiled once per (entry point,
+   bucket, static config) via ``jax.jit(...).lower(...).compile()`` and
+   held in an explicit table with hit/compile counters (``stats()``), so
+   retrace regressions are testable.  ``enable_persistent_cache()`` points
+   JAX's persistent compilation cache at ``artifacts/jax_cache`` so repeated
+   ``scripts/check.sh`` / benchmark runs pay XLA compilation once per
+   machine.
+3. **Chunked megabatch execution** — a request larger than the biggest
+   bucket (or whose element footprint exceeds ``max_elements_resident``)
+   streams through a ``lax.map`` over fixed-size chunks with the stacked
+   inputs donated to the executable: per-chunk *in-jit intermediates*
+   (e.g. the Test-1 random planes, generated in-jit from per-element key
+   data — the dominant footprint of that sweep by ``words x (nplanes+4)``)
+   never exist for more than one chunk at a time, so populations of
+   thousands of simulated DIMMs become feasible.  Batched *inputs and
+   outputs* still scale with N — they are carried/returned whole — so
+   ``stats()["max_resident"]`` proxies the intermediate residency (the
+   chunk), not total allocation; chunking pays off exactly where
+   intermediates dwarf inputs/outputs (Test 1), and is asymptotically
+   neutral where outputs dominate anyway (characterization's [N, F]
+   maps).
+
+Both dispatched paths are sliced back to the caller's N and are bit-exact
+per element against the direct (unbucketed) calls, which every entry point
+keeps as its parity reference (``dispatch="direct"``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import mesh as mesh_lib
+
+DEFAULT_MAX_BUCKET = 4096
+# Footprint budget for one resident dispatch, in element-cost units (the
+# caller's per-element word count): chunk * element_cost <= budget.
+DEFAULT_MAX_ELEMENTS_RESIDENT = 1 << 27
+
+DEFAULT_CACHE_DIR = os.path.join("artifacts", "jax_cache")
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchConfig:
+    """Per-call knobs; the defaults serve every in-repo sweep."""
+
+    max_bucket: int = DEFAULT_MAX_BUCKET
+    max_elements_resident: int = DEFAULT_MAX_ELEMENTS_RESIDENT
+
+
+_LOCK = threading.Lock()
+_EXECUTABLES: dict = {}
+_KEY_LOCKS: dict = {}
+_STATS: dict = {}
+
+
+# --------------------------------------------------------------------------
+# Bucketing
+# --------------------------------------------------------------------------
+def bucket_ladder(n_devices: int = 1,
+                  max_bucket: int = DEFAULT_MAX_BUCKET) -> tuple:
+    """The canonical bucket sizes: ``n_devices * 2**k`` up to the smallest
+    rung >= ``max_bucket``.  Every rung is divisible by the mesh, so the
+    sharded flat axis never needs a device-count repad."""
+    ladder, b = [], max(1, int(n_devices))
+    while True:
+        ladder.append(b)
+        if b >= max_bucket:
+            return tuple(ladder)
+        b *= 2
+
+
+def pick_bucket(n: int, ladder) -> int | None:
+    """Smallest rung >= ``n``; None when ``n`` overflows the ladder (the
+    chunked path takes over)."""
+    for b in ladder:
+        if b >= n:
+            return b
+    return None
+
+
+def pad_axis(a: np.ndarray, n_to: int, axis: int = 0) -> np.ndarray:
+    """Pad ``axis`` up to ``n_to`` by repeating the first slice (valid,
+    finite values — padded lanes are masked/sliced off, never reduced)."""
+    a = np.asarray(a)
+    pad = n_to - a.shape[axis]
+    if pad <= 0:
+        return a
+    first = np.take(a, [0], axis=axis)
+    reps = [1] * a.ndim
+    reps[axis] = pad
+    return np.concatenate([a, np.tile(first, reps)], axis=axis)
+
+
+# --------------------------------------------------------------------------
+# AOT executable cache
+# --------------------------------------------------------------------------
+def _leaf_key(x):
+    if hasattr(x, "shape") and hasattr(x, "dtype"):
+        return (tuple(x.shape), str(x.dtype))
+    return ("py", type(x).__name__, x)
+
+
+def _stats_entry(entry: str) -> dict:
+    return _STATS.setdefault(entry, {"calls": 0, "compiles": 0, "hits": 0,
+                                     "chunked_calls": 0, "max_resident": 0})
+
+
+def stats(entry: str | None = None) -> dict:
+    """Dispatch counters: per entry point ``calls`` / ``compiles`` (actual
+    ``lower().compile()`` invocations = traces) / ``hits`` (warm-executable
+    reuses) / ``chunked_calls`` / ``max_resident`` (largest resident flat
+    batch actually materialized — the peak-memory proxy)."""
+    with _LOCK:
+        if entry is not None:
+            return dict(_stats_entry(entry))
+        return {k: dict(v) for k, v in _STATS.items()}
+
+
+def reset_stats() -> None:
+    with _LOCK:
+        _STATS.clear()
+
+
+def clear_cache() -> None:
+    """Drop every cached executable (tests use this to count fresh traces;
+    the persistent on-disk cache, when enabled, still makes the recompiles
+    cheap)."""
+    with _LOCK:
+        _EXECUTABLES.clear()
+        _KEY_LOCKS.clear()
+
+
+def aot_call(entry: str, fn, args: tuple, *, statics_key=(),
+             donate: bool = False, resident: int | None = None):
+    """Run ``fn(*args)`` through the AOT executable cache.
+
+    ``fn`` must be jit-able with every static already closed over;
+    ``statics_key`` distinguishes executables whose closed-over config
+    differs at equal arg shapes.  The cache key is (entry, statics_key,
+    arg treedef, every leaf's shape/dtype, x64 flag, donation) — exactly
+    the trace key, so ``stats(entry)["compiles"]`` counts real retraces.
+    """
+    flat, treedef = jax.tree.flatten(args)
+    key = (entry, tuple(statics_key), treedef,
+           tuple(_leaf_key(x) for x in flat),
+           bool(jax.config.jax_enable_x64), bool(donate))
+    with _LOCK:
+        s = _stats_entry(entry)
+        s["calls"] += 1
+        if resident:
+            s["max_resident"] = max(s["max_resident"], int(resident))
+        compiled = _EXECUTABLES.get(key)
+        key_lock = _KEY_LOCKS.setdefault(key, threading.Lock())
+    if compiled is None:
+        # per-key lock: concurrent same-key callers wait for one compile
+        # instead of duplicating it (and double-counting "compiles")
+        with key_lock:
+            with _LOCK:
+                compiled = _EXECUTABLES.get(key)
+            if compiled is None:
+                jitted = jax.jit(fn, donate_argnums=tuple(range(len(args)))
+                                 if donate else ())
+                with warnings.catch_warnings():
+                    warnings.filterwarnings(
+                        "ignore",
+                        message="Some donated buffers were not usable")
+                    compiled = jitted.lower(*args).compile()
+                with _LOCK:
+                    _EXECUTABLES[key] = compiled
+                    _stats_entry(entry)["compiles"] += 1
+            else:
+                with _LOCK:
+                    _stats_entry(entry)["hits"] += 1
+    else:
+        with _LOCK:
+            _stats_entry(entry)["hits"] += 1
+    return compiled(*args)
+
+
+# --------------------------------------------------------------------------
+# The flat-batch dispatcher
+# --------------------------------------------------------------------------
+def _valid_mask(n: int, n_to: int) -> np.ndarray:
+    return (np.arange(n_to) < n)
+
+
+def _chunk_fn(kernel, n_batched: int):
+    """lax.map the flat kernel over the chunk axis of stacked inputs."""
+    def fn(*args):
+        batched, valid = args[:n_batched], args[n_batched]
+        rep = args[n_batched + 1:]
+
+        def one(xs):
+            *b, v = xs
+            return kernel(*b, *rep, v)
+        return jax.lax.map(one, (*batched, valid))
+    return fn
+
+
+def dispatch_flat(entry: str, kernel, batched, replicated=(), *,
+                  statics_key=(), mesh=None, element_cost: int = 1,
+                  config: DispatchConfig | None = None,
+                  mode: str = "auto") -> dict:
+    """Dispatch one flat-batch kernel call shape-stably.
+
+    ``kernel(*batched, *replicated, valid)`` maps the leading (flat batch)
+    axis of every array in ``batched`` elementwise; ``valid`` is a boolean
+    [N_padded] lane mask the kernel threads to its reductions/outputs (dead
+    lanes may hold arbitrary copies of lane 0).  ``replicated`` operands
+    ride along unpadded.  Outputs must be a dict of arrays with the flat
+    axis leading; they come back sliced to the true N.
+
+    The flat axis is padded to the smallest bucket (``n_devices * 2**k``)
+    so arbitrary N hit a warm executable; requests larger than the top
+    bucket — or whose ``N * element_cost`` footprint exceeds
+    ``config.max_elements_resident`` — run as a ``lax.map`` over fixed-size
+    chunks with donated stacked inputs (peak memory O(chunk)).  With a
+    multi-device ``mesh`` the resident flat axis is sharded over
+    ``("batch",)`` exactly like the direct calls; bucket and chunk sizes
+    are mesh-divisible by construction.
+
+    ``mode``: "auto" (bucket, chunk on overflow), "bucketed", "chunked".
+    """
+    cfg = config or DispatchConfig()
+    mesh = mesh_lib.make_batch_mesh() if mesh is None else mesh
+    n_devices = int(mesh.devices.size)
+    if n_devices > 1:
+        # compiled executables are shard-committed: two meshes with equal
+        # shapes must not share an executable
+        statics_key = tuple(statics_key) + (
+            "mesh", tuple(int(d.id) for d in mesh.devices.flat))
+    batched = [np.asarray(a) for a in batched]
+    n = batched[0].shape[0]
+    ladder = bucket_ladder(n_devices, cfg.max_bucket)
+    budget = max(cfg.max_elements_resident, int(element_cost) * ladder[0])
+    fits = [b for b in ladder if b * element_cost <= budget]
+    if mode == "bucketed":
+        fits = list(ladder)
+        if pick_bucket(n, fits) is None:
+            raise ValueError(
+                f"dispatch='bucketed' forced, but N={n} exceeds the top "
+                f"bucket {fits[-1]}; use 'auto'/'chunked' or raise "
+                "max_bucket")
+    bucket = pick_bucket(n, fits) if mode != "chunked" else None
+
+    if bucket is not None:
+        resident = bucket
+        args = tuple(jnp.asarray(pad_axis(a, bucket)) for a in batched) \
+            + (jnp.asarray(_valid_mask(n, bucket)),)
+        if n_devices > 1:
+            args = tuple(
+                jax.device_put(a, mesh_lib.batch_sharding(mesh, a.ndim))
+                for a in args)
+        rep = _replicate(replicated, mesh, n_devices)
+        out = aot_call(entry, kernel, args[:-1] + rep + args[-1:],
+                       statics_key=statics_key, resident=resident)
+        out = {k: np.asarray(v)[:n] for k, v in out.items()}
+        return out
+
+    # ---- chunked megabatch: lax.map over fixed-size chunks ---------------
+    chunk = pick_bucket(n, fits) or fits[-1]
+    k = -(-n // chunk)
+    stacked = tuple(
+        jnp.asarray(pad_axis(a, k * chunk).reshape((k, chunk)
+                                                   + a.shape[1:]))
+        for a in batched)
+    valid = jnp.asarray(_valid_mask(n, k * chunk).reshape(k, chunk))
+    if n_devices > 1:
+        put = lambda a: jax.device_put(
+            a, mesh_lib.chunked_batch_sharding(mesh, a.ndim))
+        stacked = tuple(put(a) for a in stacked)
+        valid = put(valid)
+    rep = _replicate(replicated, mesh, n_devices)
+    with _LOCK:
+        _stats_entry(entry)["chunked_calls"] += 1
+    out = aot_call(entry + "/chunked", _chunk_fn(kernel, len(stacked)),
+                   stacked + (valid,) + rep, statics_key=statics_key,
+                   donate=True, resident=chunk)
+    return {key: np.asarray(v).reshape((k * chunk,) + v.shape[2:])[:n]
+            for key, v in out.items()}
+
+
+def _replicate(replicated, mesh, n_devices: int) -> tuple:
+    rep = tuple(jnp.asarray(a) for a in replicated)
+    if n_devices > 1:
+        full = jax.sharding.NamedSharding(mesh,
+                                          jax.sharding.PartitionSpec())
+        rep = tuple(jax.device_put(a, full) for a in rep)
+    return rep
+
+
+# --------------------------------------------------------------------------
+# Persistent compilation cache
+# --------------------------------------------------------------------------
+def enable_persistent_cache(path: str | None = None) -> str | None:
+    """Point JAX's persistent compilation cache at ``path`` (default
+    ``artifacts/jax_cache`` or ``$JAX_COMPILATION_CACHE_DIR``), with the
+    size/compile-time thresholds dropped to zero so every engine kernel
+    persists.  Safe to call repeatedly; returns the directory (or None when
+    this jax build has no persistent cache)."""
+    path = path or os.environ.get("JAX_COMPILATION_CACHE_DIR",
+                                  DEFAULT_CACHE_DIR)
+    try:
+        os.makedirs(path, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", path)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
+    except (AttributeError, ValueError, OSError):  # older jax / RO file
+        return None
+    return path

@@ -19,7 +19,13 @@ operating-point sweep:
 - the flat axis is sharded over the available devices with a
   ``jax.sharding.NamedSharding`` built from :func:`repro.launch.mesh
   .make_batch_mesh` — a transparent no-op on one device, a population-scale
-  fan-out on a real mesh.
+  fan-out on a real mesh;
+- the flat axis reaches the kernel through :mod:`repro.engine.dispatch`
+  (``dispatch="auto"``): padded to a canonical bucket with a lane mask so
+  arbitrary (D, V, T) grids reuse warm AOT executables, or streamed in
+  fixed-size chunks when the grid overflows the resident budget —
+  ``dispatch="direct"`` keeps the exact-shape jit call as the dispatched
+  paths' parity reference.
 
 The original per-DIMM loop survives as ``impl="scalar"`` (the same
 convention as ``system.simulate_scalar`` / voltron ``impl="scalar"``) and is
@@ -38,6 +44,7 @@ from jax.experimental import enable_x64
 
 from repro import hw
 from repro.dram import chips, circuit, timing
+from repro.engine import dispatch as dispatch_lib
 from repro.launch import mesh as mesh_lib
 
 FIELD_SIZE = chips.BANKS * 256          # susceptibility entries per DIMM
@@ -218,15 +225,18 @@ def _ndtr(x):
     return 0.5 * jax.lax.erfc(-x * (1.0 / np.sqrt(2.0)))
 
 
-@jax.jit
-def _characterize_flat(req_rcd, req_rp, sigma, floor, vmin, v, temp, d_idx,
-                       field, pattern_h, retention_ms, t_rcd, t_rp):
+def _characterize_flat_fn(req_rcd, req_rp, sigma, floor, vmin, v, temp,
+                          field_n, pattern_h, retention_ms, t_rcd,
+                          t_rp, valid):
     """The flat-batch characterization kernel (float64 under x64).
 
     All leading axes are the flattened N = D*V*T grid (sharded);
-    ``field`` [D, FIELD_SIZE] is replicated and gathered per flat element
-    through ``d_idx``; ``pattern_h`` [P] and ``retention_ms`` [R] are
-    replicated.
+    ``field_n`` [N, FIELD_SIZE] is each element's susceptibility field,
+    gathered eagerly at dispatch so the executable shape depends only on
+    the flat bucket, never on the DIMM count; ``pattern_h`` [P] and
+    ``retention_ms`` [R] are replicated.  ``valid`` [N] masks padded lanes
+    (bucketed/chunked dispatch): every per-element reduction lands on
+    zero there, so dead lanes can hold arbitrary finite copies of lane 0.
     """
     xmax = chips.CELL_XMAX
     lo, hi = _ndtr(-jnp.asarray(xmax, req_rcd.dtype)), \
@@ -241,13 +251,12 @@ def _characterize_flat(req_rcd, req_rp, sigma, floor, vmin, v, temp, d_idx,
     # is float32 and the threshold arithmetic stays in that dtype — see
     # errors._x_threshold); mirror that rounding, then evaluate the CDF in
     # float64 exactly like chips._trunc_phi.
-    field_n = field[d_idx]                                   # [N, F]
     sigma32 = sigma.astype(jnp.float32)
     p_ok = jnp.ones_like(field_n)
     for t_prog, req in ((t_rcd, req_rcd), (t_rp, req_rp)):
         x32 = (t_prog.astype(jnp.float32) / req.astype(jnp.float32)
                - 1.0) / sigma32                              # [N] f32
-        p_ok = p_ok * trunc_phi(x32.astype(field.dtype)[:, None] - field_n)
+        p_ok = p_ok * trunc_phi(x32.astype(field_n.dtype)[:, None] - field_n)
     frac = 1.0 - jnp.mean(p_ok, axis=1)
     frac = jnp.where(v < floor, jnp.maximum(frac, 0.5), frac)
     line_map = 1.0 - p_ok
@@ -278,9 +287,14 @@ def _characterize_flat(req_rcd, req_rp, sigma, floor, vmin, v, temp, d_idx,
             * (1.0 + kv * jnp.maximum(hw.VDD_NOMINAL - v, 0.0)
                / chips.DEFICIT_RANGE_V)[:, None])
 
-    return {"frac": frac, "ber": ber, "tmin_rcd": tmin_rcd,
-            "tmin_rp": tmin_rp, "line_map": line_map, "row_map": row_map,
-            "weak": weak}
+    out = {"frac": frac, "ber": ber, "tmin_rcd": tmin_rcd,
+           "tmin_rp": tmin_rp, "line_map": line_map, "row_map": row_map,
+           "weak": weak}
+    return {k: jnp.where(valid.reshape((-1,) + (1,) * (a.ndim - 1)), a, 0.0)
+            for k, a in out.items()}
+
+
+_characterize_flat = jax.jit(_characterize_flat_fn)
 
 
 def _pad_flat(arrays: list, n_devices: int) -> tuple:
@@ -295,42 +309,56 @@ def _pad_flat(arrays: list, n_devices: int) -> tuple:
 
 
 def _characterize_batched(grid, v, t_grid, patterns, retention_ms,
-                          t_rcd, t_rp, mesh):
+                          t_rcd, t_rp, mesh, dispatch_mode: str = "auto",
+                          max_elements_resident: int | None = None):
     d_, v_, t_ = grid.n_dimms, v.size, len(t_grid)
     req = _required_latency_grid(grid, v, t_grid)
 
     flat = lambda a: np.ascontiguousarray(
         np.broadcast_to(a, (d_, v_, t_)).reshape(-1))
     per_d = lambda a: flat(np.asarray(a, np.float64)[:, None, None])
+    field64 = grid.susceptibility.reshape(d_, FIELD_SIZE)
+    d_idx = flat(np.arange(d_)[:, None, None]).astype(np.int32)
     inputs = [
         req["rcd"].reshape(-1), req["rp"].reshape(-1),
         per_d(grid.cell_sigma), per_d(grid.fail_floor), per_d(grid.vmin),
         flat(np.asarray(v, np.float64)[None, :, None]),
         flat(np.asarray(t_grid, np.float64)[None, None, :]),
-        flat(np.arange(d_)[:, None, None]).astype(np.int32),
+        field64[d_idx],     # eager gather: shape depends on N alone, not D
     ]
 
     mesh = mesh_lib.make_batch_mesh() if mesh is None else mesh
     n_devices = int(mesh.devices.size)
-    inputs, n_pad = _pad_flat(inputs, n_devices)
     pattern_h = np.array([chips.pattern_phase(p) for p in patterns],
                          np.float64)
     ret = np.asarray(retention_ms, np.float64)
     with enable_x64():
-        args = [jnp.asarray(a) for a in inputs]
-        field = jnp.asarray(grid.susceptibility.reshape(d_, FIELD_SIZE))
-        if n_devices > 1:
-            args = [jax.device_put(a, mesh_lib.batch_sharding(mesh, a.ndim))
-                    for a in args]
-            field = jax.device_put(
-                field, jax.sharding.NamedSharding(
-                    mesh, jax.sharding.PartitionSpec()))
-        out = _characterize_flat(*args, field, jnp.asarray(pattern_h),
-                                 jnp.asarray(ret), np.float64(t_rcd),
-                                 np.float64(t_rp))
-        out = {k: np.asarray(a, np.float64) for k, a in out.items()}
-    if n_pad:
-        out = {k: a[:-n_pad] for k, a in out.items()}
+        if dispatch_mode == "direct":
+            inputs, n_pad = _pad_flat(inputs, n_devices)
+            args = [jnp.asarray(a) for a in inputs]
+            valid = jnp.ones((args[0].shape[0],), bool)
+            if n_devices > 1:
+                args = [jax.device_put(a,
+                                       mesh_lib.batch_sharding(mesh, a.ndim))
+                        for a in args]
+                valid = jax.device_put(valid,
+                                       mesh_lib.batch_sharding(mesh, 1))
+            out = _characterize_flat(*args, jnp.asarray(pattern_h),
+                                     jnp.asarray(ret), np.float64(t_rcd),
+                                     np.float64(t_rp), valid)
+            out = {k: np.asarray(a, np.float64) for k, a in out.items()}
+            if n_pad:
+                out = {k: a[:-n_pad] for k, a in out.items()}
+        else:
+            cfg = None if max_elements_resident is None else \
+                dispatch_lib.DispatchConfig(
+                    max_elements_resident=int(max_elements_resident))
+            out = dispatch_lib.dispatch_flat(
+                "characterize", _characterize_flat_fn, inputs,
+                (pattern_h, ret, np.float64(t_rcd), np.float64(t_rp)),
+                mesh=mesh, element_cost=8 * FIELD_SIZE, mode=dispatch_mode,
+                config=cfg)
+            out = {k: np.asarray(a, np.float64) for k, a in out.items()}
 
     shape3 = (d_, v_, t_)
     return CharacterizationBatch(
@@ -389,7 +417,9 @@ def characterize_batch(grid: DimmGrid, v_grid, t_grid=(20.0,),
                        patterns=("0xaa",),
                        retention_ms=RETENTION_GRID_MS,
                        t_rcd: float = 10.0, t_rp: float = 10.0,
-                       mesh=None, impl: str = "auto") -> CharacterizationBatch:
+                       mesh=None, impl: str = "auto", dispatch: str = "auto",
+                       max_elements_resident: int | None = None,
+                       ) -> CharacterizationBatch:
     """Characterize every (DIMM, voltage, temperature) of the grid at once.
 
     The D x V x T grid flattens into one batch axis evaluated by a single
@@ -397,6 +427,13 @@ def characterize_batch(grid: DimmGrid, v_grid, t_grid=(20.0,),
     over all available devices — a no-op on one device).  ``impl="scalar"``
     runs the original per-DIMM chips/errors Python loop instead (parity
     reference and benchmark baseline).
+
+    ``dispatch`` picks how the flat axis reaches the kernel: "auto" routes
+    through :mod:`repro.engine.dispatch` (bucketed padding + AOT executable
+    cache, chunked when the grid overflows the resident budget);
+    "bucketed"/"chunked" force one dispatched path; "direct" keeps the
+    exact-shape single jit call (one retrace per new grid shape — the
+    dispatched paths' parity reference).
     """
     v = np.atleast_1d(np.asarray(v_grid, np.float64))
     if impl == "auto":
@@ -406,5 +443,8 @@ def characterize_batch(grid: DimmGrid, v_grid, t_grid=(20.0,),
                                     t_rcd, t_rp)
     if impl != "batched":
         raise ValueError(f"unknown impl {impl!r}")
+    if dispatch not in ("auto", "bucketed", "chunked", "direct"):
+        raise ValueError(f"unknown dispatch {dispatch!r}")
     return _characterize_batched(grid, v, t_grid, patterns, retention_ms,
-                                 t_rcd, t_rp, mesh)
+                                 t_rcd, t_rp, mesh, dispatch,
+                                 max_elements_resident)

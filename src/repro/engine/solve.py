@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.engine import dispatch as dispatch_lib
 from repro.engine.batch import PointGrid, WorkloadBatch
 from repro.kernels.sweep_solve import ops as sweep_ops
 from repro.memsim.core import CPU_FREQ_GHZ
@@ -92,8 +93,7 @@ def _power_energy(points: dict, acts, reads, total_ipc, runtime_s):
             "system_j": cpu_static_j + cpu_dyn_j + dram_j}
 
 
-@functools.partial(jax.jit, static_argnames=("impl",))
-def _grid_sim(feats: dict, points: dict, impl: str = "reference") -> dict:
+def _grid_sim_fn(feats: dict, points: dict, impl: str = "reference") -> dict:
     """The full [W, P] grid simulation; returns a dict of jnp arrays."""
     w, c = feats["mpki"].shape
     p = points["t_rcd"].shape[0]
@@ -128,6 +128,30 @@ def _grid_sim(feats: dict, points: dict, impl: str = "reference") -> dict:
             "bus_utilization": out["utilization"].reshape(w, p), **pe}
 
 
+_grid_sim = jax.jit(_grid_sim_fn, static_argnames=("impl",))
+
+
+def _grid_sim_dispatched(feats: dict, points: dict, impl: str) -> dict:
+    """``_grid_sim`` through the shape-stable dispatch layer: the W and P
+    axes are padded up to canonical buckets so any workload x point grid
+    hits a warm AOT executable (the kernel reduces only over the core axis,
+    so padded lanes are dead rows sliced off here — no mask needed)."""
+    w, p = feats["mpki"].shape[0], points["t_rcd"].shape[0]
+    ladder = dispatch_lib.bucket_ladder(1)
+    bw = dispatch_lib.pick_bucket(w, ladder) or w
+    bp = dispatch_lib.pick_bucket(p, ladder) or p
+    pf = {k: jnp.asarray(dispatch_lib.pad_axis(a, bw))
+          for k, a in feats.items()}
+    pp = {k: jnp.asarray(dispatch_lib.pad_axis(a, bp))
+          for k, a in points.items()}
+    r = dispatch_lib.aot_call("grid_sim",
+                              functools.partial(_grid_sim_fn, impl=impl),
+                              (pf, pp), statics_key=(impl,),
+                              resident=bw * bp)
+    return {k: (a[:w] if k == "alone_ipc" else a[:w, :p])
+            for k, a in r.items()}
+
+
 @dataclasses.dataclass(frozen=True)
 class BatchResult:
     """Grid simulation results; every array is [W, P] unless noted."""
@@ -157,12 +181,22 @@ class ComparisonBatch:
     cpu_energy_increase_pct: np.ndarray
 
 
-def simulate_batch(wb: WorkloadBatch, pg: PointGrid,
-                   impl: str = "auto") -> BatchResult:
-    """Simulate every (workload, operating point) pair in one batched call."""
+def simulate_batch(wb: WorkloadBatch, pg: PointGrid, impl: str = "auto",
+                   dispatch: str = "auto") -> BatchResult:
+    """Simulate every (workload, operating point) pair in one batched call.
+
+    ``dispatch="auto"`` pads W and P to canonical buckets and reuses a warm
+    AOT executable per bucket (see :mod:`repro.engine.dispatch`);
+    ``"direct"`` keeps the exact-shape jit call (one retrace per new grid
+    shape — the bucketed path's parity reference)."""
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "reference"
-    r = _grid_sim(_wb_feats(wb), _pg_points(pg), impl=impl)
+    if dispatch == "direct":
+        r = _grid_sim(_wb_feats(wb), _pg_points(pg), impl=impl)
+    elif dispatch in ("auto", "bucketed"):
+        r = _grid_sim_dispatched(_wb_feats(wb), _pg_points(pg), impl)
+    else:
+        raise ValueError(f"unknown dispatch {dispatch!r}")
     a = {k: np.asarray(v, np.float64) for k, v in r.items()}
     return BatchResult(
         wb.names, a["ipc"], a["alone_ipc"], a["ws"], a["stall_frac"],
@@ -175,14 +209,15 @@ def simulate_batch(wb: WorkloadBatch, pg: PointGrid,
 
 def evaluate_batch(wb: WorkloadBatch, pg: PointGrid,
                    base_pg: PointGrid | None = None,
-                   impl: str = "auto") -> ComparisonBatch:
+                   impl: str = "auto",
+                   dispatch: str = "auto") -> ComparisonBatch:
     """Fig. 13-19 / Table 5 comparisons of every grid point against the
     (per-workload) baseline point — [W, P] arrays in one batched call."""
     base_pg = base_pg or PointGrid.nominal()
     if base_pg.n_points != 1:
         raise ValueError("base_pg must hold exactly one baseline point")
-    pt = simulate_batch(wb, pg, impl=impl)
-    base = simulate_batch(wb, base_pg, impl=impl)
+    pt = simulate_batch(wb, pg, impl=impl, dispatch=dispatch)
+    base = simulate_batch(wb, base_pg, impl=impl, dispatch=dispatch)
     b_ws = base.ws[:, :1]
     ppw_base = b_ws / base.power["system_w"][:, :1]
     return ComparisonBatch(

@@ -21,7 +21,13 @@ sweep (:mod:`repro.engine.population` for the characterization grid,
   jnp;
 - the flat axis is padded to the device count and sharded with a
   ``NamedSharding`` over :func:`repro.launch.mesh.make_batch_mesh` — the
-  same transparent-on-one-device convention as ``characterize_batch``.
+  same transparent-on-one-device convention as ``characterize_batch`` —
+  and reaches the kernel through :mod:`repro.engine.dispatch`
+  (``dispatch="auto"``): bucketed padding with a lane mask for warm AOT
+  executable reuse, or chunked ``lax.map`` streaming (random planes
+  generated per chunk in-jit, O(chunk) peak memory) for megabatches over
+  the resident budget; ``dispatch="direct"`` keeps the exact-shape jit
+  call as the bit-exact parity reference.
 
 ``find_min_latency_batch`` replaces the Section 4.2 O(grid^2) Python loop
 of closed-form error evaluations with one vectorized evaluation: a latency
@@ -48,6 +54,7 @@ from jax.experimental import enable_x64
 from repro import hw
 from repro.dram import chips, circuit
 from repro.dram import test1 as scalar_test1
+from repro.engine import dispatch as dispatch_lib
 from repro.engine import population
 from repro.engine.population import DimmGrid
 from repro.kernels.voltage_inject import ops as inject_ops
@@ -143,17 +150,18 @@ def _bank_key_data(indices, rounds: int, seed: int, banks: int) -> np.ndarray:
 # --------------------------------------------------------------------------
 # The flat-batch kernel
 # --------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("banks", "rows", "words",
-                                             "nplanes", "inject_impl"))
-def _test1_flat(p_word, key_data, p_idx, patterns, *, banks, rows, words,
-                nplanes, inject_impl):
+def _test1_flat_fn(p_word, key_data, p_idx, patterns, valid, *, banks, rows,
+                   words, nplanes, inject_impl):
     """One Test-1 evaluation of the flat N = D*V*P*R batch.
 
     ``p_word`` float32 [N, banks, rows]; ``key_data`` uint32 [N, banks, 2, 2];
     ``p_idx`` int32 [N] pattern-group index; ``patterns`` uint32 [P, 2]
-    (data, ~data) words.  The random planes are generated in-jit from the
-    carried key data and the corruption runs as a single ``voltage_inject``
-    dispatch over the flattened [N*banks*rows, words] plane.
+    (data, ~data) words; ``valid`` bool [N] masks padded lanes (their
+    counts/maps land on zero).  The random planes are generated in-jit from
+    the carried key data — under chunked dispatch that means one chunk's
+    planes at a time — and the corruption runs as a single
+    ``voltage_inject`` dispatch over the flattened [N*banks*rows, words]
+    plane.
     """
     n = p_word.shape[0]
     # write data into even rows, ~data into odd rows (Test 1 lines 4-5)
@@ -183,14 +191,22 @@ def _test1_flat(p_word, key_data, p_idx, patterns, *, banks, rows, words,
     line_bad = flips.reshape(n, banks, rows, words // WORDS_PER_LINE,
                              WORDS_PER_LINE).sum(-1) > 0
     return {
-        "bit_errors": flips.sum(axis=(1, 2, 3)),
-        "erroneous_lines": line_bad.sum(axis=(1, 2, 3)).astype(jnp.int32),
-        "error_rows": flips.sum(axis=3) > 0,            # [N, banks, rows]
+        "bit_errors": jnp.where(valid, flips.sum(axis=(1, 2, 3)), 0),
+        "erroneous_lines": jnp.where(
+            valid, line_bad.sum(axis=(1, 2, 3)), 0).astype(jnp.int32),
+        "error_rows": valid[:, None, None] & (flips.sum(axis=3) > 0),
     }
 
 
+_test1_flat = jax.jit(_test1_flat_fn,
+                      static_argnames=("banks", "rows", "words", "nplanes",
+                                       "inject_impl"))
+
+
 def _run_batched(grid, v, pattern_groups, rounds, t_rcd, t_rp, banks, rows,
-                 row_bytes, temp_c, seed, nplanes, mesh, inject_impl):
+                 row_bytes, temp_c, seed, nplanes, mesh, inject_impl,
+                 dispatch_mode: str = "auto",
+                 max_elements_resident: int | None = None):
     words = row_bytes // 4
     d_, v_, p_ = grid.n_dimms, v.size, len(pattern_groups)
     shape4 = (d_, v_, p_, rounds)
@@ -212,19 +228,35 @@ def _run_batched(grid, v, pattern_groups, rounds, t_rcd, t_rp, banks, rows,
 
     mesh = mesh_lib.make_batch_mesh() if mesh is None else mesh
     n_devices = int(mesh.devices.size)
-    inputs, n_pad = population._pad_flat(inputs, n_devices)
-    args = [jnp.asarray(a) for a in inputs]
-    pat = jnp.asarray(patterns)
-    if n_devices > 1:
-        args = [jax.device_put(a, mesh_lib.batch_sharding(mesh, a.ndim))
-                for a in args]
-        pat = jax.device_put(pat, jax.sharding.NamedSharding(
-            mesh, jax.sharding.PartitionSpec()))
-    out = _test1_flat(*args, pat, banks=banks, rows=rows, words=words,
-                      nplanes=nplanes, inject_impl=inject_impl)
-    out = {k: np.asarray(a) for k, a in out.items()}
-    if n_pad:
-        out = {k: a[:-n_pad] for k, a in out.items()}
+    statics = dict(banks=banks, rows=rows, words=words, nplanes=nplanes,
+                   inject_impl=inject_impl)
+    if dispatch_mode == "direct":
+        inputs, n_pad = population._pad_flat(inputs, n_devices)
+        args = [jnp.asarray(a) for a in inputs]
+        valid = jnp.ones((args[0].shape[0],), bool)
+        pat = jnp.asarray(patterns)
+        if n_devices > 1:
+            args = [jax.device_put(a, mesh_lib.batch_sharding(mesh, a.ndim))
+                    for a in args]
+            valid = jax.device_put(valid, mesh_lib.batch_sharding(mesh, 1))
+            pat = jax.device_put(pat, jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec()))
+        out = _test1_flat(*args, pat, valid, **statics)
+        out = {k: np.asarray(a) for k, a in out.items()}
+        if n_pad:
+            out = {k: a[:-n_pad] for k, a in out.items()}
+    else:
+        # the [banks, rows, words] data/random planes plus popcounts are
+        # the resident footprint each flat element drags through the jit
+        cfg = None if max_elements_resident is None else \
+            dispatch_lib.DispatchConfig(
+                max_elements_resident=int(max_elements_resident))
+        out = dispatch_lib.dispatch_flat(
+            "test1", functools.partial(_test1_flat_fn, **statics),
+            inputs, (patterns,), statics_key=tuple(sorted(statics.items())),
+            mesh=mesh, element_cost=(nplanes + 4) * banks * rows * words,
+            mode=dispatch_mode, config=cfg)
+        out = {k: np.asarray(a) for k, a in out.items()}
 
     return Test1Batch(
         grid.modules, v, tuple(tuple(g) for g in pattern_groups), rounds,
@@ -271,7 +303,8 @@ def run_batch(grid: DimmGrid, v_grid,
               banks: int = 8, rows: int = 64, row_bytes: int = 4096,
               temp_c: float = 20.0, seed: int = 0, nplanes: int = 2,
               mesh=None, impl: str = "auto",
-              inject_impl: str | None = None) -> Test1Batch:
+              inject_impl: str | None = None, dispatch: str = "auto",
+              max_elements_resident: int | None = None) -> Test1Batch:
     """Run Test 1 on every (DIMM, voltage, pattern group, round) at once.
 
     The D x V x P x R grid flattens into one batch axis evaluated by a
@@ -283,6 +316,17 @@ def run_batch(grid: DimmGrid, v_grid,
     ``dram.test1.run`` instead (parity reference and benchmark baseline);
     ``inject_impl`` picks the ``voltage_inject`` implementation for either
     path (default: the ops-level auto choice).
+
+    ``dispatch``: "auto" routes the flat axis through
+    :mod:`repro.engine.dispatch` — padded to a canonical bucket (warm AOT
+    executable per bucket, bit-exact: padded lanes are masked out) or, when
+    the sweep overflows the resident-element budget, streamed chunk by
+    chunk with the random planes generated per chunk in-jit (peak memory
+    O(chunk)).  "bucketed"/"chunked" force a path; "direct" keeps the
+    exact-shape jit call (the dispatched paths' bit-exact parity
+    reference).  ``max_elements_resident`` overrides the dispatch layer's
+    resident-footprint budget (in element-cost units) — the knob that
+    decides when a megabatch starts streaming.
     """
     if grid.dimms is None:
         raise ValueError("Test 1 needs a grid built from real DIMMs "
@@ -297,12 +341,14 @@ def run_batch(grid: DimmGrid, v_grid,
                            inject_impl or "auto")
     if impl != "batched":
         raise ValueError(f"unknown impl {impl!r}")
+    if dispatch not in ("auto", "bucketed", "chunked", "direct"):
+        raise ValueError(f"unknown dispatch {dispatch!r}")
     if inject_impl is None:
         inject_impl = ("pallas" if jax.default_backend() == "tpu"
                        else "reference")
     return _run_batched(grid, v, pattern_groups, rounds, t_rcd, t_rp, banks,
                         rows, row_bytes, temp_c, seed, nplanes, mesh,
-                        inject_impl)
+                        inject_impl, dispatch, max_elements_resident)
 
 
 # --------------------------------------------------------------------------

@@ -41,6 +41,18 @@ def batch_sharding(mesh, ndim: int = 1):
     return jax.sharding.NamedSharding(mesh, spec)
 
 
+def chunked_batch_sharding(mesh, ndim: int = 2):
+    """``NamedSharding`` for a ``[chunks, chunk, ...]`` stacked megabatch
+    (``repro.engine.dispatch``): the *resident* chunk axis (axis 1) splits
+    over ``batch`` exactly like the un-chunked flat axis would, while the
+    chunk-stream axis stays unsharded — ``lax.map`` walks it sequentially.
+    Bucket and chunk sizes are ``n_devices * 2**k`` by construction
+    (:func:`repro.engine.dispatch.bucket_ladder`), so the split is always
+    even on this mesh."""
+    spec = jax.sharding.PartitionSpec(None, "batch", *([None] * (ndim - 2)))
+    return jax.sharding.NamedSharding(mesh, spec)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

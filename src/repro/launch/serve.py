@@ -27,7 +27,10 @@ def generate(cfg, params, prompts, gen_len: int, *, frontend=None):
     max_len = s + gen_len + 8
     logits, caches = lm.prefill(params, prompts, cfg, max_len=max_len,
                                 frontend_embeds=frontend)
-    step = jax.jit(lambda p, c, t: lm.decode_step(p, t, c, cfg))
+    # donate the KV caches into the jitted step: the new caches alias the
+    # old buffers in place of holding two full copies per decoded token
+    step = jax.jit(lambda p, c, t: lm.decode_step(p, t, c, cfg),
+                   donate_argnums=(1,))
     tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
     out = [tok]
     for _ in range(gen_len - 1):
