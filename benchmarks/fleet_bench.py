@@ -1,0 +1,167 @@
+"""Fleet-scale Voltron throughput: the W x D cross-product as one dispatched
+scan vs the per-DIMM suite loop, plus shape-stable reuse across fleet
+request shapes.
+
+Acceptance measurements for the fleet layer (:mod:`repro.engine.fleet`):
+
+1. **Batched fleet vs per-DIMM loop** — W workloads x D characterized
+   DIMMs through one dispatched ``lax.scan`` (every lane carrying its own
+   safe candidate table) versus D sequential ``run_suite`` calls (one
+   warm engine scan per DIMM — the best pre-fleet composition).  Reported:
+   steady-state lanes/s for both and the speedup.
+
+2. **Shape stream** — a stream of distinct (W, D) fleet request shapes.
+   The dispatched path pads each to a canonical ``n_devices * 2**k``
+   bucket, so its retrace count is bounded by the bucket ladder, not the
+   stream (the gated metric: deterministic, hardware-independent), and
+   warm-executable hits must appear from the second same-bucket request
+   on.  Table builds ride ``find_min_latency_batch`` through the same
+   dispatch layer (entry ``min_latency``).
+
+``python -m benchmarks.fleet_bench [OUT.json]`` writes the metrics as a
+JSON artifact (``scripts/check.sh`` stores it as
+``artifacts/BENCH_fleet.json`` and gates regressions against the committed
+baseline).
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+
+MODULES = ("A1", "A3", "B1", "B2", "B5", "C1", "C2", "C4")
+N_WORKLOADS = 9
+N_INTERVALS = 8
+# (workload count, module count) fleet request stream: distinct flat sizes
+# that revisit canonical buckets
+STREAM = ((9, 8), (6, 8), (9, 5), (4, 4), (7, 3), (3, 8), (9, 3), (5, 5))
+
+
+def _measure() -> dict:
+    from repro import engine
+    from repro.core import perf_model, voltron
+    from repro.engine import dispatch, fleet
+    from repro.memsim import workloads
+
+    wls = workloads.homogeneous_workloads()[:N_WORKLOADS]
+    model = perf_model.fit()
+    grid = engine.DimmGrid.from_population(MODULES)
+
+    t0 = time.time()
+    tables = voltron.fleet_tables(grid)
+    tables_s = time.time() - t0
+
+    # -- per-DIMM loop: one warm suite scan per DIMM -----------------------
+    def per_dimm_loop():
+        return [voltron.run_suite(wls, model=model, n_intervals=N_INTERVALS,
+                                  tables=tables.select([m]))
+                for m in tables.modules]
+
+    per_dimm_loop()                                  # warm the executable
+    loop_s = np.inf
+    for _ in range(3):
+        t0 = time.time()
+        loop_runs = per_dimm_loop()
+        loop_s = min(loop_s, time.time() - t0)
+
+    # -- one dispatched fleet scan ----------------------------------------
+    run = lambda: voltron.run_fleet(wls, model=model, tables=tables,
+                                    n_intervals=N_INTERVALS)
+    t0 = time.time()
+    res = run()                                      # compile + run
+    compile_s = time.time() - t0
+    fleet_s = np.inf
+    for _ in range(3):
+        t0 = time.time()
+        res = run()
+        fleet_s = min(fleet_s, time.time() - t0)
+
+    # per-lane parity against the per-DIMM loop (selections bit-equal)
+    parity = all(
+        np.array_equal(r.selected_voltages, res.selected_voltages[wi, di])
+        for di, runs in enumerate(loop_runs)
+        for wi, r in enumerate(runs))
+
+    n_lanes = len(wls) * tables.n_dimms
+
+    # -- shape stream: retraces bounded by the ladder, hits from bucket
+    # reuse (the deterministic gated metric) ------------------------------
+    dispatch.clear_cache()
+    dispatch.reset_stats()
+    wb_full = engine.WorkloadBatch.from_workloads(wls)
+    phases = voltron._phase_matrix(wb_full.names, N_INTERVALS,
+                                   voltron.DEFAULT_INTERVAL_CYCLES,
+                                   None, 0.15)
+    for w_count, d_count in STREAM:
+        wb = engine.WorkloadBatch.from_workloads(wls[:w_count])
+        fleet.run_fleet_batched(
+            wb, tables.select(tables.modules[:d_count]),
+            phases[:, :w_count], model.coef_low, model.coef_high, 5.0)
+    s = dispatch.stats("fleet")
+    n_buckets = len(dispatch.bucket_ladder())
+
+    return {
+        "n_workloads": len(wls),
+        "n_dimms": tables.n_dimms,
+        "n_lanes": n_lanes,
+        "n_intervals": N_INTERVALS,
+        "tables_s": tables_s,
+        "per_dimm_loop_s": loop_s,
+        "fleet_s": fleet_s,
+        "steady_s": fleet_s,
+        "compile_s": compile_s,
+        "speedup": loop_s / fleet_s,
+        "lanes_per_s_loop": n_lanes / loop_s,
+        "lanes_per_s_fleet": n_lanes / fleet_s,
+        "parity": bool(parity),
+        "stream": {
+            "n_requests": len(STREAM),
+            "dispatch_retraces": int(s["compiles"]),
+            "dispatch_hits": int(s["hits"]),
+            "n_buckets": n_buckets,
+        },
+    }
+
+
+def fleet_sweep():
+    m = _measure()
+    s = m["stream"]
+    return [
+        ("fleet/controller",
+         f"{m['fleet_s'] * 1e3:.0f}ms for {m['n_lanes']} lanes "
+         f"({m['n_workloads']}W x {m['n_dimms']}D x "
+         f"{m['n_intervals']} intervals)",
+         f"{m['speedup']:.1f}x vs per-DIMM loop "
+         f"({m['per_dimm_loop_s'] * 1e3:.0f}ms), parity={m['parity']}"),
+        ("fleet/shape_stream",
+         f"{s['n_requests']} fleet shapes",
+         f"retraces={s['dispatch_retraces']} <= buckets={s['n_buckets']}, "
+         f"hits={s['dispatch_hits']}"),
+    ]
+
+
+# separates compile/steady internally; the harness must not run it twice
+fleet_sweep.self_timed = True
+
+
+def main() -> None:
+    from repro.engine import dispatch
+    dispatch.enable_persistent_cache()
+    m = _measure()
+    print(json.dumps(m, indent=2))
+    if len(sys.argv) > 1:
+        with open(sys.argv[1], "w") as f:
+            json.dump(m, f, indent=2)
+        print(f"wrote {sys.argv[1]}", file=sys.stderr)
+    ok = (m["parity"]
+          and m["stream"]["dispatch_retraces"] <= m["stream"]["n_buckets"]
+          and m["stream"]["dispatch_hits"] >= 1)
+    if not ok:
+        print("ACCEPTANCE FAILURE", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -45,6 +45,9 @@ SPECS = {
     "BENCH_dispatch.json": {
         "stream.dispatch_retraces": "lower",
     },
+    "BENCH_fleet.json": {
+        "stream.dispatch_retraces": "lower",
+    },
 }
 
 

@@ -27,5 +27,10 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.dispatch_bench artifacts/BENCH_dispatch.json
 
+# fleet-scale Voltron: W x D controller cross-product through the dispatch
+# layer (exits nonzero if per-lane parity or shape-stable reuse breaks)
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.fleet_bench artifacts/BENCH_fleet.json
+
 # steady-state throughput gate vs the committed baselines (>30% fails)
 python scripts/bench_gate.py artifacts benchmarks/baselines

@@ -18,6 +18,15 @@ including workload phase variation (which is what makes the
 profile-interval length matter — Fig. 19).  ``run_controller`` is the
 single-workload wrapper; ``impl="scalar"`` keeps the original Python loop
 as the parity reference.
+
+Fleet mode closes the loop between the paper's two halves: ``fleet_tables``
+derives each characterized DIMM's *safe* candidate table (per-candidate
+error-free (tRCD, tRP) from the Sections 4-5 model, candidates excluded
+where no latency recovers correct operation) and ``run_fleet`` runs every
+(workload, DIMM) pair of a fleet as one dispatched W x D scan
+(`repro.engine.fleet`), reporting per-DIMM/per-vendor distributions of the
+Fig. 14/17 quantities.  ``run_suite(..., tables=...)`` runs the plain suite
+against one DIMM's table — the fleet's per-lane parity reference.
 """
 from __future__ import annotations
 
@@ -112,17 +121,38 @@ def run_suite(wls, target_loss_pct: float = DEFAULT_TARGET_PCT,
               model: perf_model.PiecewiseLinearModel | None = None,
               bank_locality: bool = False,
               phase_seed: int | None = None,
-              phase_amplitude: float = 0.15) -> list:
+              phase_amplitude: float = 0.15,
+              tables=None) -> list:
     """Run the Voltron interval loop for every workload in ``wls`` — one
-    batched ``lax.scan`` over intervals, vectorized over workloads."""
+    batched ``lax.scan`` over intervals, vectorized over workloads.
+
+    ``tables``: optional single-DIMM :class:`repro.engine.fleet.FleetTables`
+    — the suite then runs against that DIMM's characterization-derived safe
+    candidate table (excluded candidates masked from Algorithm 1) instead
+    of the global Table-3 grid.  This is the fleet's per-lane parity
+    reference; whole-fleet sweeps go through :func:`run_fleet`.
+    """
     from repro import engine
     model = model or perf_model.fit()
     wb = engine.WorkloadBatch.from_workloads(wls)
     phases = _phase_matrix(wb.names, n_intervals, interval_cycles,
                            phase_seed, phase_amplitude)
-    cand_v, lat_feat, timings = _candidate_grid(bank_locality)
+    if tables is None:
+        cand_v, lat_feat, timings = _candidate_grid(bank_locality)
+        cand_valid = None
+    else:
+        if tables.n_dimms != 1:
+            raise ValueError("run_suite takes a single-DIMM table "
+                             "(tables.select([module])); whole fleets go "
+                             "through run_fleet")
+        if bank_locality:
+            raise ValueError("bank_locality blends the Table-3 grid; it "
+                             "does not apply to characterized safe tables")
+        cand_v, lat_feat = tables.cand_v, tables.lat_feat[0]
+        timings, cand_valid = tables.timings[0], tables.valid[0]
     res = engine.run_batched(wb, phases, model.coef_low, model.coef_high,
-                             target_loss_pct, cand_v, lat_feat, timings)
+                             target_loss_pct, cand_v, lat_feat, timings,
+                             cand_valid=cand_valid)
     return [ControllerRun(
         res.names[w], target_loss_pct, res.selected_voltages[w],
         res.perf_loss_pct[w], res.dram_power_savings_pct[w],
@@ -218,6 +248,61 @@ def _operating_point(v: float, bank_locality: bool) -> system.OperatingPoint:
         return system.voltron_point(v)
     from repro.core import bank_locality as bl
     return system.voltron_point(v, fast_bank_frac=bl.fast_bank_fraction(v))
+
+
+def fleet_tables(grid=None, *, max_latency: float = 20.0,
+                 temp_c: float = 20.0, dispatch: str = "auto"):
+    """Per-DIMM safe candidate tables for the Algorithm-1 voltages.
+
+    For every characterized DIMM and every candidate (plus the 1.35 V
+    fallback), the smallest error-free platform-quantized (tRCD, tRP) from
+    the Sections 4-5 model; candidates with no error-free latency (NaN from
+    ``find_min_latency_batch`` — e.g. Vendor C below its recovery floor)
+    are excluded from that DIMM's Algorithm-1 selection.  ``grid`` defaults
+    to the full Table 7 population (:class:`repro.engine.DimmGrid`).
+    """
+    from repro import engine
+    from repro.engine import fleet
+    if grid is None:
+        grid = engine.DimmGrid.from_population()
+    cand_v = np.array(CANDIDATE_VOLTAGES + [hw.VDD_NOMINAL])
+    return fleet.build_tables(grid, cand_v, max_latency=max_latency,
+                              temp_c=temp_c, dispatch=dispatch)
+
+
+def run_fleet(wls, grid=None, target_loss_pct: float = DEFAULT_TARGET_PCT,
+              n_intervals: int = 25,
+              interval_cycles: int = DEFAULT_INTERVAL_CYCLES,
+              model: perf_model.PiecewiseLinearModel | None = None,
+              tables=None,
+              phase_seed: int | None = None,
+              phase_amplitude: float = 0.15,
+              max_latency: float = 20.0, temp_c: float = 20.0,
+              dispatch: str = "auto"):
+    """Voltron across a fleet: every workload on every DIMM's safe table.
+
+    Builds (or takes) the per-DIMM candidate tables and runs the W x D
+    cross-product as one dispatched, mesh-sharded ``lax.scan``
+    (:func:`repro.engine.fleet.run_fleet_batched`).  Returns a
+    :class:`repro.engine.fleet.FleetBatchResult` with [W, D] arrays of the
+    Fig. 14/17 quantities and per-vendor distribution helpers.
+    """
+    from repro import engine
+    from repro.engine import fleet
+    model = model or perf_model.fit()
+    if tables is None:
+        tables = fleet_tables(grid, max_latency=max_latency, temp_c=temp_c,
+                              dispatch=dispatch)
+    elif grid is not None or max_latency != 20.0 or temp_c != 20.0:
+        raise ValueError("grid/max_latency/temp_c configure the table "
+                         "build and conflict with an explicit tables=; "
+                         "pass them to fleet_tables instead")
+    wb = engine.WorkloadBatch.from_workloads(wls)
+    phases = _phase_matrix(wb.names, n_intervals, interval_cycles,
+                           phase_seed, phase_amplitude)
+    return fleet.run_fleet_batched(wb, tables, phases, model.coef_low,
+                                   model.coef_high, target_loss_pct,
+                                   dispatch=dispatch)
 
 
 def evaluate_suite(target_loss_pct: float = DEFAULT_TARGET_PCT,

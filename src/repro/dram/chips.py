@@ -120,15 +120,19 @@ class DIMM:
 
     @functools.cached_property
     def _crit_op(self) -> str:
-        """The operation whose latency requirement crosses 10 ns first."""
+        """The operation whose latency requirement crosses its reliable
+        minimum first (each op against its *own* threshold — tRCD vs 10 ns
+        and tRP vs 10 ns happen to coincide today, but the comparison must
+        not silently couple them)."""
         v = np.linspace(0.95, 1.35, 81)
         rcd = np.asarray(circuit.vendor_raw_latency("rcd", v, self.vendor))
         rp = np.asarray(circuit.vendor_raw_latency("rp", v, self.vendor))
-        # crossing voltage = max v where raw > 10
-        def crossing(raw):
-            above = v[raw > timing.RELIABLE_MIN_NOMINAL.t_rcd]
+        # crossing voltage = max v where raw > the op's reliable minimum
+        def crossing(raw, t_min):
+            above = v[raw > t_min]
             return above.max() if above.size else 0.0
-        return "rcd" if crossing(rcd) >= crossing(rp) else "rp"
+        return ("rcd" if crossing(rcd, timing.RELIABLE_MIN_NOMINAL.t_rcd)
+                >= crossing(rp, timing.RELIABLE_MIN_NOMINAL.t_rp) else "rp")
 
     @functools.cached_property
     def latency_scale(self) -> float:
@@ -138,7 +142,8 @@ class DIMM:
         v_edge = self.vmin - 0.0125
         raw = float(np.asarray(
             circuit.vendor_raw_latency(self._crit_op, v_edge, self.vendor)))
-        t10 = hw.T_RCD_RELIABLE_MIN
+        t10 = (timing.RELIABLE_MIN_NOMINAL.t_rcd if self._crit_op == "rcd"
+               else timing.RELIABLE_MIN_NOMINAL.t_rp)
         worst_x = CELL_XMAX + float(self.susceptibility.max())
         return t10 / (raw * (1.0 + self.cell_sigma * worst_x))
 
@@ -234,12 +239,15 @@ class DIMM:
         return hw.BEAT_BITS * p_bit
 
     def beat_error_distribution(self, v, t_rcd: float = 10.0,
-                                t_rp: float = 10.0) -> dict:
+                                t_rp: float = 10.0,
+                                temp_c: float = 20.0) -> dict:
         """Fractions of 64-bit data beats with 0 / 1 / 2 / >2 bit errors
-        (Fig. 9).  Within a failing beat, bad bits ~ Binomial(64, p_bit)."""
+        (Fig. 9).  Within a failing beat, bad bits ~ Binomial(64, p_bit).
+        ``temp_c`` reaches the underlying line-error model so the Fig. 9
+        densities compose with the Section 5.3 temperature scenarios."""
         from scipy import stats
         v_arr = np.atleast_1d(np.asarray(v, dtype=np.float64))
-        frac_line = self.line_error_fraction(v_arr, t_rcd, t_rp)
+        frac_line = self.line_error_fraction(v_arr, t_rcd, t_rp, temp_c)
         # a failing line has ~55% of its 8 beats affected
         p_beat_bad = frac_line * BEAT_BAD_FRAC
         deficit = np.clip((self.vmin - v_arr) / DEFICIT_RANGE_V, 0.0, 1.5)

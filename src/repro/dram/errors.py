@@ -110,9 +110,14 @@ class SecdedOutcome:
 
 
 def secded_outcomes(dimm: chips.DIMM, v: float, t_rcd: float = 10.0,
-                    t_rp: float = 10.0) -> SecdedOutcome:
-    """Apply SECDED semantics to the modeled beat-error density (Fig. 9)."""
-    dist = dimm.beat_error_distribution(v, t_rcd, t_rp)
+                    t_rp: float = 10.0,
+                    temp_c: float = 20.0) -> SecdedOutcome:
+    """Apply SECDED semantics to the modeled beat-error density (Fig. 9).
+
+    ``temp_c`` threads through to the beat-error model (previously pinned
+    at 20 C) so the ECC analysis composes with the Section 5.3 temperature
+    scenarios; the default leaves existing results unchanged."""
+    dist = dimm.beat_error_distribution(v, t_rcd, t_rp, temp_c)
     one = float(np.atleast_1d(dist["one"])[0])
     two = float(np.atleast_1d(dist["two"])[0])
     many = float(np.atleast_1d(dist["many"])[0])
@@ -121,10 +126,11 @@ def secded_outcomes(dimm: chips.DIMM, v: float, t_rcd: float = 10.0,
                          undetected_or_mis=many, clean=zero)
 
 
-def secded_is_sufficient(dimm: chips.DIMM, v: float, threshold: float = 0.5) -> bool:
+def secded_is_sufficient(dimm: chips.DIMM, v: float, threshold: float = 0.5,
+                         temp_c: float = 20.0) -> bool:
     """Would SECDED fix at least ``threshold`` of erroneous beats?  The
     paper's answer (Section 4.4) is no — most failing beats have >2 flips."""
-    o = secded_outcomes(dimm, v)
+    o = secded_outcomes(dimm, v, temp_c=temp_c)
     total_bad = o.corrected + o.still_erroneous
     if total_bad == 0:
         return True

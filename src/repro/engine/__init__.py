@@ -25,6 +25,16 @@ Batching axes
   axis, the [P, 2] pattern words stay replicated, and the bit injection is
   a single ``voltage_inject`` dispatch over the flattened
   [N * banks * rows, words] plane).
+- **W x D** — the Voltron fleet (``fleet.run_fleet_batched``: workloads x
+  characterized DIMMs, flattened with the DIMM axis fastest — lane
+  ``n = w * D + d``).  Workload features and the [T, W] phase schedule are
+  repeated per DIMM; each lane carries its DIMM's [K] safe candidate
+  timing table, latency features and candidate-exclusion mask
+  (``fleet.FleetTables``, derived from ``test1.find_min_latency_batch`` —
+  NaN minimum latency = candidate excluded), and the whole cross-product
+  runs as one dispatched interval scan (``controller.run_flat``, stats
+  entry ``"fleet"``).  The [K] candidate-voltage vector and the Eq. 1
+  coefficients stay replicated.
 
 The flat batch-axis convention
 ==============================
@@ -63,10 +73,12 @@ parity reference).  The contract:
 - **Mask semantics:** kernels with per-element reductions take a boolean
   ``valid`` [N] lane mask as their last argument and must zero dead lanes
   in every output (``test1._test1_flat_fn`` masks its counts/maps,
-  ``population._characterize_flat_fn`` its fractions).  Grid-shaped
-  kernels (``solve._grid_sim_fn``, ``controller._controller_scan_fn``)
-  reduce only over the unpadded core axis, so they pad-and-slice without
-  a mask.
+  ``population._characterize_flat_fn`` its fractions,
+  ``test1._min_latency_flat_fn`` its latency pairs — NaN there is a real
+  "unrecoverable" verdict, so dead lanes land on 0.0 instead).  Per-lane
+  kernels (``solve._grid_sim_fn``, ``controller._controller_flat_fn``)
+  reduce only over the unpadded core/interval axes, so they pad-and-slice
+  without consulting the mask.
 - **When callers get chunking:** a request larger than the top bucket —
   or whose ``N * element_cost`` exceeds the ``max_elements_resident``
   budget — streams through a ``lax.map`` over fixed-size chunks (donated
@@ -93,10 +105,14 @@ Results match the scalar paths to float32 tolerance (system sweep) / 1e-6
 same PRNG keys); shapes and dataclass fields are unchanged.
 """
 from repro.engine import dispatch  # noqa: F401
+from repro.engine import fleet  # noqa: F401
 from repro.engine import test1  # noqa: F401
 from repro.engine.batch import PointGrid, WorkloadBatch  # noqa: F401
 from repro.engine.controller import (ControllerBatchResult,  # noqa: F401
                                      run_batched)
+from repro.engine.fleet import (FleetBatchResult,  # noqa: F401
+                                FleetTables, build_tables,
+                                run_fleet_batched)
 from repro.engine.population import (CharacterizationBatch,  # noqa: F401
                                      DimmGrid, characterize_batch)
 from repro.engine.solve import (BatchResult, ComparisonBatch,  # noqa: F401

@@ -7,9 +7,20 @@ scan: the carried state is each workload's currently-selected candidate
 index (plus the running baseline/point accumulators), the scanned axis is
 the interval, and every per-interval simulation is a batched fixed-point
 solve over all W workloads at once.  Candidate timings are resolved up
-front into a [10]-entry table (9 Algorithm-1 candidates + the 1.35 V
-fallback) so voltage selection is a gather, and Algorithm 1 itself is an
-``argmax`` over the piecewise-linear loss predictions.
+front into a *per-element* [N, K] table (9 Algorithm-1 candidates + the
+1.35 V fallback) so voltage selection is a gather, and Algorithm 1 itself
+is an ``argmax`` over the piecewise-linear loss predictions masked by each
+element's candidate-validity row.
+
+Per-element tables are what lets the fleet layer (:mod:`repro.engine
+.fleet`) run the W workloads x D DIMMs cross-product through this same
+scan: each flat lane carries its own DIMM's characterization-derived safe
+(tRCD, tRP, tRAS) table and exclusion mask, while the plain suite
+(``run_batched``) broadcasts one shared grid over its W lanes.  The
+dispatched path routes the flat axis through
+:func:`repro.engine.dispatch.dispatch_flat`, so buckets are
+``n_devices * 2**k`` (mesh-divisible by construction) and any suite or
+fleet size reuses a warm AOT executable.
 """
 from __future__ import annotations
 
@@ -25,6 +36,11 @@ from repro.engine import solve as engine_solve
 from repro.engine.batch import WorkloadBatch
 from repro.kernels.sweep_solve import ops as sweep_ops
 from repro.memsim.workloads import MEM_INTENSIVE_MPKI
+
+# fixed leading-axis order of the flat controller kernel's batched operands
+_FEAT_KEYS = ("mpki", "ipc_base", "mlp", "row_hit", "eff_banks",
+              "write_mult", "alone_row_hit", "alone_eff_banks",
+              "alone_write_mult")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,10 +64,22 @@ def _predict(coef_lo, coef_hi, lat, mpki, stall):
 
 
 def _controller_scan_fn(feats, phases, coef_lo, coef_hi, target, cand_v,
-                        lat_feat, cand_t, impl: str = "reference"):
+                        lat_feat, cand_t, cand_valid, impl: str = "reference"):
+    """The interval scan over W flat lanes.
+
+    ``cand_t`` holds per-element [W, K] (tRCD, tRP, tRAS) candidate tables
+    and ``lat_feat`` the per-element [W, K-1] Algorithm-1 latency features
+    (the plain suite broadcasts one shared row; the fleet carries one row
+    per (workload, DIMM) lane).  ``cand_valid`` [W, K] masks candidates a
+    lane must never select (excluded fleet candidates hold NaN timings —
+    a NaN prediction compares False, but the mask makes the exclusion
+    explicit rather than an IEEE accident).  The fallback (last) candidate
+    must be valid on every lane.
+    """
     w, c = feats["mpki"].shape
     nominal = {k: jnp.broadcast_to(v, (w,))
                for k, v in engine_solve.NOMINAL_POINT.items()}
+    gather = lambda a, idx: jnp.take_along_axis(a, idx[:, None], axis=1)[:, 0]
 
     def shared_solve(mpki_t, t_rcd, t_rp, t_ras):
         return sweep_ops.solve(
@@ -75,8 +103,9 @@ def _controller_scan_fn(feats, phases, coef_lo, coef_hi, target, cand_v,
         alone = engine_solve.alone_solve(feats, mpki=mpki_t, impl=impl)
         base = shared_solve(mpki_t, nominal["t_rcd"], nominal["t_rp"],
                             nominal["t_ras"])
-        pt = shared_solve(mpki_t, cand_t["t_rcd"][v_idx],
-                          cand_t["t_rp"][v_idx], cand_t["t_ras"][v_idx])
+        pt = shared_solve(mpki_t, gather(cand_t["t_rcd"], v_idx),
+                          gather(cand_t["t_rp"], v_idx),
+                          gather(cand_t["t_ras"], v_idx))
         base_ws, base_pe = metrics(base, alone, nominal)
         ones = jnp.ones((w,), jnp.float32)
         pt_points = {"v_array": cand_v[v_idx],
@@ -97,13 +126,13 @@ def _controller_scan_fn(feats, phases, coef_lo, coef_hi, target, cand_v,
         }
 
         # profile under the current operating point, then Algorithm 1:
-        # smallest candidate (ascending voltage) within the loss target,
-        # falling back to nominal when none qualifies.
+        # smallest *valid* candidate (ascending voltage) within the loss
+        # target, falling back to nominal when none qualifies.
         mean_mpki = jnp.mean(mpki_t, axis=-1)
         mean_stall = jnp.mean(pt["stall_frac"], axis=-1)
-        preds = _predict(coef_lo, coef_hi, lat_feat[None, :],
-                         mean_mpki[:, None], mean_stall[:, None])   # [W, 9]
-        ok = preds <= target
+        preds = _predict(coef_lo, coef_hi, lat_feat,
+                         mean_mpki[:, None], mean_stall[:, None])   # [W, K-1]
+        ok = (preds <= target) & cand_valid[:, :-1]
         new_idx = jnp.where(ok.any(axis=-1),
                             jnp.argmax(ok, axis=-1),
                             jnp.full((w,), cand_v.shape[0] - 1))
@@ -136,69 +165,130 @@ def _controller_scan_fn(feats, phases, coef_lo, coef_hi, target, cand_v,
 _controller_scan = jax.jit(_controller_scan_fn, static_argnames=("impl",))
 
 
-def _controller_dispatched(feats, phases, coef_lo, coef_hi, target, cand_v,
-                           lat_feat, cand_t, impl):
-    """The interval scan through the shape-stable dispatch layer: the W
-    axis (of both the features and the [T, W] phase schedule) is padded to
-    a canonical bucket so any suite size reuses a warm AOT executable; the
-    scan length T stays exact (it is the time axis, not a batch axis).
-    Padded lanes are dead workload copies sliced off before the result."""
-    w = feats["mpki"].shape[0]
-    bw = dispatch_lib.pick_bucket(w, dispatch_lib.bucket_ladder(1)) or w
-    pf = {k: jnp.asarray(dispatch_lib.pad_axis(a, bw))
-          for k, a in feats.items()}
-    ph = jnp.asarray(dispatch_lib.pad_axis(phases, bw, axis=1))
-    out = dispatch_lib.aot_call(
-        "controller_scan",
-        functools.partial(_controller_scan_fn, impl=impl),
-        (pf, ph, coef_lo, coef_hi, target, cand_v, lat_feat, cand_t),
-        statics_key=(impl,), resident=bw)
-    return {k: a[:w] for k, a in out.items()}
+def _controller_flat_fn(*args, impl: str):
+    """``_controller_scan_fn`` in :func:`repro.engine.dispatch.dispatch_flat`
+    form: every batched operand leads with the flat W (or W x D) axis —
+    the [T, W] phase schedule rides transposed as [W, T] — followed by the
+    replicated operands and the dispatch lane mask.  The scan reduces only
+    over the core/interval axes, never across lanes, so padded lanes are
+    dead copies sliced off by the dispatcher (no mask needed — the same
+    contract as ``solve._grid_sim_fn``)."""
+    (mpki, ipc_base, mlp, row_hit, eff_banks, write_mult, alone_row_hit,
+     alone_eff_banks, alone_write_mult, phases_nt, lat_feat, t_rcd, t_rp,
+     t_ras, cand_valid, coef_lo, coef_hi, target, cand_v, _valid) = args
+    feats = dict(zip(_FEAT_KEYS, (mpki, ipc_base, mlp, row_hit, eff_banks,
+                                  write_mult, alone_row_hit, alone_eff_banks,
+                                  alone_write_mult)))
+    cand_t = {"t_rcd": t_rcd, "t_rp": t_rp, "t_ras": t_ras}
+    return _controller_scan_fn(feats, phases_nt.T, coef_lo, coef_hi, target,
+                               cand_v, lat_feat, cand_t, cand_valid,
+                               impl=impl)
+
+
+def run_flat(entry: str, feats: dict, phases, coef_lo, coef_hi,
+             target_loss_pct, cand_v, lat_feat, cand_t: dict, cand_valid,
+             *, impl: str = "auto", dispatch: str = "auto", mesh=None,
+             max_elements_resident: int | None = None) -> dict:
+    """Run the interval scan over N flat lanes with per-element tables.
+
+    ``feats``: dict of [N, C]/[N] workload features (``_wb_feats`` order);
+    ``phases``: [T, N]; ``cand_t``: dict of [N, K] candidate timings;
+    ``lat_feat``: [N, K-1]; ``cand_valid``: [N, K] bool.  ``entry`` names
+    the dispatch-stats bucket ("controller_scan" for the plain suite,
+    "fleet" for the W x D cross-product).  Returns the raw output dict
+    (``selected_idx`` int [N, T], float64 metric arrays [N]).
+
+    ``dispatch="auto"``/"bucketed"/"chunked" route the flat axis through
+    :func:`repro.engine.dispatch.dispatch_flat` — padded to an
+    ``n_devices * 2**k`` bucket (mesh-divisible by construction, sharded
+    over the ``("batch",)`` mesh) with warm AOT executable reuse, or
+    streamed in fixed-size chunks past the resident budget;  "direct"
+    keeps the exact-shape jit call as the parity reference.
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "reference"
+    f32 = lambda x: np.asarray(x, np.float32)
+    feats = {k: f32(feats[k]) for k in _FEAT_KEYS}
+    phases = f32(phases)
+    cand_t = {k: f32(cand_t[k]) for k in ("t_rcd", "t_rp", "t_ras")}
+    lat_feat = f32(lat_feat)
+    cand_valid = np.asarray(cand_valid, bool)
+    coef_lo, coef_hi, cand_v = f32(coef_lo), f32(coef_hi), f32(cand_v)
+    target = np.float32(target_loss_pct)
+
+    if dispatch == "direct":
+        out = _controller_scan(
+            {k: jnp.asarray(v) for k, v in feats.items()},
+            jnp.asarray(phases), coef_lo, coef_hi, target, cand_v,
+            jnp.asarray(lat_feat),
+            {k: jnp.asarray(v) for k, v in cand_t.items()},
+            jnp.asarray(cand_valid), impl=impl)
+    elif dispatch in ("auto", "bucketed", "chunked"):
+        cfg = None if max_elements_resident is None else \
+            dispatch_lib.DispatchConfig(
+                max_elements_resident=int(max_elements_resident))
+        batched = [feats[k] for k in _FEAT_KEYS] + [
+            np.ascontiguousarray(phases.T), lat_feat, cand_t["t_rcd"],
+            cand_t["t_rp"], cand_t["t_ras"], cand_valid]
+        out = dispatch_lib.dispatch_flat(
+            entry, functools.partial(_controller_flat_fn, impl=impl),
+            batched, (coef_lo, coef_hi, target, cand_v),
+            statics_key=(impl,), mesh=mesh, mode=dispatch,
+            element_cost=16 * max(1, phases.shape[0]), config=cfg)
+    else:
+        raise ValueError(f"unknown dispatch {dispatch!r}")
+    out = {k: np.asarray(v) for k, v in out.items()}
+    return {k: (a if k == "selected_idx" else a.astype(np.float64))
+            for k, a in out.items()}
 
 
 def run_batched(wb: WorkloadBatch, phases: np.ndarray, coef_lo, coef_hi,
                 target_loss_pct: float, cand_v: np.ndarray,
                 lat_feat: np.ndarray, cand_timings: np.ndarray,
                 impl: str = "auto",
-                dispatch: str = "auto") -> ControllerBatchResult:
+                dispatch: str = "auto",
+                cand_valid: np.ndarray | None = None,
+                mesh=None) -> ControllerBatchResult:
     """Run the interval loop for all W workloads in one scan.
 
     ``phases``: [T, W] per-interval memory-intensity factors.
     ``cand_v``: [K] candidate voltages, ascending, last entry = fallback.
-    ``lat_feat``: [K-1] Algorithm-1 latency features of the candidates.
-    ``cand_timings``: [K, 3] resolved (tRCD, tRP, tRAS) per candidate.
+    ``lat_feat``: [K-1] (or per-workload [W, K-1]) Algorithm-1 latency
+    features of the candidates.
+    ``cand_timings``: [K, 3] (or per-workload [W, K, 3]) resolved
+    (tRCD, tRP, tRAS) per candidate.
+    ``cand_valid``: optional [K] / [W, K] bool — candidates a workload may
+    select (default: all; the fleet layer uses this to exclude voltages a
+    DIMM cannot run error-free).
     ``dispatch``: "auto" buckets the workload axis through
-    :mod:`repro.engine.dispatch`; "direct" keeps the exact-shape jit call
-    (the bucketed path's parity reference).
+    :mod:`repro.engine.dispatch` (mesh-divisible buckets, sharded flat
+    axis); "direct" keeps the exact-shape jit call (the bucketed path's
+    parity reference).
     """
-    if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "reference"
-    f32 = lambda x: jnp.asarray(np.asarray(x), jnp.float32)
-    cand_t = {"t_rcd": f32(cand_timings[:, 0]),
-              "t_rp": f32(cand_timings[:, 1]),
-              "t_ras": f32(cand_timings[:, 2])}
-    if dispatch == "direct":
-        out = _controller_scan(engine_solve._wb_feats(wb), f32(phases),
-                               f32(coef_lo), f32(coef_hi),
-                               jnp.float32(target_loss_pct), f32(cand_v),
-                               f32(lat_feat), cand_t, impl=impl)
-    elif dispatch in ("auto", "bucketed"):
-        out = _controller_dispatched(engine_solve._wb_feats(wb), f32(phases),
-                                     f32(coef_lo), f32(coef_hi),
-                                     jnp.float32(target_loss_pct),
-                                     f32(cand_v), f32(lat_feat), cand_t,
-                                     impl)
-    else:
-        raise ValueError(f"unknown dispatch {dispatch!r}")
-    a = {k: np.asarray(v, np.float64) for k, v in out.items()
-         if k != "selected_idx"}
+    w = wb.n_workloads
+    cand_v64 = np.atleast_1d(np.asarray(cand_v, np.float64))
+    k = cand_v64.size
+    timings = np.asarray(cand_timings, np.float64)
+    if timings.ndim == 2:
+        timings = np.broadcast_to(timings[None], (w, k, 3))
+    lat = np.asarray(lat_feat, np.float64)
+    if lat.ndim == 1:
+        lat = np.broadcast_to(lat[None], (w, k - 1))
+    valid = (np.ones((w, k), bool) if cand_valid is None
+             else np.broadcast_to(np.asarray(cand_valid, bool), (w, k)))
+    cand_t = {"t_rcd": timings[..., 0], "t_rp": timings[..., 1],
+              "t_ras": timings[..., 2]}
+    feats = {key: np.asarray(a)
+             for key, a in engine_solve._wb_feats(wb).items()}
+    out = run_flat("controller_scan", feats, np.asarray(phases), coef_lo,
+                   coef_hi, target_loss_pct, cand_v64, lat, cand_t, valid,
+                   impl=impl, dispatch=dispatch, mesh=mesh)
     # map indices back to the exact float64 candidate voltages so the
     # selections compare bit-equal against the scalar controller
-    a["selected_voltages"] = \
-        np.asarray(cand_v, np.float64)[np.asarray(out["selected_idx"])]
-    return ControllerBatchResult(wb.names, a["selected_voltages"],
-                                 a["perf_loss_pct"],
-                                 a["dram_power_savings_pct"],
-                                 a["dram_energy_savings_pct"],
-                                 a["system_energy_savings_pct"],
-                                 a["perf_per_watt_gain_pct"])
+    selected = cand_v64[out["selected_idx"]]
+    return ControllerBatchResult(wb.names, selected,
+                                 out["perf_loss_pct"],
+                                 out["dram_power_savings_pct"],
+                                 out["dram_energy_savings_pct"],
+                                 out["system_energy_savings_pct"],
+                                 out["perf_per_watt_gain_pct"])

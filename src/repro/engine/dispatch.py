@@ -5,10 +5,11 @@ Every engine entry point flattens its sweep grid into one leading batch
 axis (the package convention) — but a *jit cache keyed on exact shapes*
 means every new (D, V, T/P, R) grid retraces the kernel from scratch, and a
 single resident ``[N, ...]`` plane bounds the population size by memory
-rather than throughput.  This module gives all four entry points
+rather than throughput.  This module gives every entry point
 (``solve.simulate_batch``/``evaluate_batch``, ``population
-.characterize_batch``, ``test1.run_batch``, ``controller.run_batched``) one
-shared dispatch discipline:
+.characterize_batch``, ``test1.run_batch``/``find_min_latency_batch``,
+``controller.run_batched`` and the fleet cross-product
+``fleet.run_fleet_batched``) one shared dispatch discipline:
 
 1. **Shape bucketing** — the flat batch axis is padded up to the smallest
    canonical *bucket* (``n_devices * 2**k``, so every bucket stays divisible

@@ -1,0 +1,198 @@
+"""Fleet-scale Voltron: per-DIMM safe-voltage tables from characterization,
+and the W workloads x D DIMMs controller cross-product as one flat sweep.
+
+The paper's two halves finally meet here.  Sections 4-5 characterize each
+DIMM's V_min / min-latency surface (:mod:`repro.engine.population`,
+:mod:`repro.engine.test1`); Section 6's Voltron controller retimes DRAM
+against a voltage-latency table.  The stock controller uses one global
+Table-3 grid for every workload — but safe voltage/latency is *per-DIMM
+and per-vendor* (that is the entire point of the characterization), so a
+fleet deployment must hand each DIMM its own table:
+
+- :func:`build_tables` derives each DIMM's safe candidate table: for every
+  Algorithm-1 candidate voltage, the platform-quantized error-free
+  (tRCD, tRP) pair from :func:`repro.engine.test1.find_min_latency_batch`.
+  A NaN pair *excludes* that candidate for that DIMM (e.g. every Vendor-C
+  candidate below the vendor recovery floor), and the exclusion mask rides
+  into Algorithm 1 so the controller can never select a voltage the DIMM
+  cannot run error-free.  tRAS keeps the circuit-model value per candidate
+  (Test 1 overlaps tRAS with the column reads — footnote 8 — so the
+  characterization does not retime it).
+
+- :func:`run_fleet_batched` runs the interval controller over the
+  flattened W x D cross-product (lane ``n = w * D + d``) as one dispatched
+  ``lax.scan``: each lane carries its own DIMM's [K] timing table, latency
+  features and exclusion row through
+  :func:`repro.engine.controller.run_flat`, which buckets/shards the flat
+  axis via :mod:`repro.engine.dispatch` (entry ``"fleet"`` — warm AOT
+  executable reuse across fleet request shapes, chunked streaming past the
+  resident budget).  Results come back as [W, D] per-DIMM distributions of
+  the Fig. 14/17 quantities, with per-vendor aggregation helpers.
+
+Parity contract: lane (w, d) of the fleet is the same computation as
+``voltron.run_suite([w], tables=tables.select([d]))`` — per-lane bit-equal
+selections (tests/test_fleet.py asserts it on a 2 x 2 grid).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.dram import circuit
+from repro.engine import controller
+from repro.engine import solve as engine_solve
+from repro.engine import test1 as engine_test1
+from repro.engine.batch import WorkloadBatch
+from repro.engine.population import DimmGrid
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetTables:
+    """Per-DIMM safe candidate tables (the characterization-to-Voltron
+    bridge).  K candidates, ascending voltage, last entry = the nominal
+    fallback (must be valid on every DIMM)."""
+
+    modules: tuple
+    vendors: tuple
+    cand_v: np.ndarray      # [K] candidate voltages
+    timings: np.ndarray     # [D, K, 3] (tRCD, tRP, tRAS); NaN where invalid
+    valid: np.ndarray       # [D, K] candidate has an error-free latency pair
+    lat_feat: np.ndarray    # [D, K-1] Algorithm-1 latency feature (tRP+tRAS)
+
+    @property
+    def n_dimms(self) -> int:
+        return len(self.modules)
+
+    @property
+    def safe_vmin(self) -> np.ndarray:
+        """[D] lowest candidate voltage each DIMM can run error-free at
+        some latency — the fleet-resolved Section 4.2 recovery boundary."""
+        ok = np.where(self.valid, self.cand_v[None, :], np.inf)
+        return ok.min(axis=1)
+
+    def select(self, modules) -> "FleetTables":
+        idx = [self.modules.index(m) for m in modules]
+        return FleetTables(
+            tuple(self.modules[i] for i in idx),
+            tuple(self.vendors[i] for i in idx),
+            self.cand_v, self.timings[idx], self.valid[idx],
+            self.lat_feat[idx])
+
+
+def build_tables(grid: DimmGrid, cand_v, *, step: float = 2.5,
+                 max_latency: float = 20.0, temp_c: float = 20.0,
+                 mesh=None, dispatch: str = "auto") -> FleetTables:
+    """Derive every DIMM's safe candidate table in one batched call.
+
+    ``cand_v`` must be ascending with the nominal fallback last.  For each
+    (DIMM, candidate), ``find_min_latency_batch`` yields the smallest
+    error-free platform-quantized (tRCD, tRP) <= ``max_latency`` — NaN
+    (candidate excluded) where no latency recovers correct operation, which
+    is exactly where the controller's exclusion mask goes.  Raising
+    ``max_latency`` can only keep or extend each DIMM's valid set, so the
+    per-DIMM safe floor (``safe_vmin``) is non-increasing in it.
+    """
+    cand_v = np.atleast_1d(np.asarray(cand_v, np.float64))
+    if cand_v.size < 2 or not (np.diff(cand_v) > 0).all():
+        raise ValueError("cand_v must be >= 2 ascending voltages "
+                         "(fallback last)")
+    minlat = engine_test1.find_min_latency_batch(
+        grid, cand_v, step=step, max_latency=max_latency, temp_c=temp_c,
+        mesh=mesh, dispatch=dispatch)                     # [D, K, 2]
+    valid = np.isfinite(minlat).all(axis=-1)              # [D, K]
+    if not valid[:, -1].all():
+        bad = [m for m, ok in zip(grid.modules, valid[:, -1]) if not ok]
+        raise ValueError(
+            f"fallback candidate {cand_v[-1]} V has no error-free latency "
+            f"<= {max_latency} ns for {bad}; the controller needs a valid "
+            "fallback on every DIMM")
+    t_ras = circuit.timings_for_voltages(cand_v)[:, 2]    # [K]
+    timings = np.concatenate(
+        [minlat, np.broadcast_to(t_ras, valid.shape)[..., None]], axis=-1)
+    timings = np.where(valid[..., None], timings, np.nan)
+    lat_feat = timings[:, :-1, 1] + timings[:, :-1, 2]    # [D, K-1]
+    return FleetTables(grid.modules, grid.vendors, cand_v, timings, valid,
+                       lat_feat)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetBatchResult:
+    """Fleet controller results, per (workload, DIMM) — the Fig. 14/17
+    quantities fleet-resolved.  Every array is [W, D] unless noted."""
+
+    names: tuple                        # [W]
+    modules: tuple                      # [D]
+    vendors: tuple                      # [D]
+    cand_v: np.ndarray                  # [K]
+    selected_voltages: np.ndarray       # [W, D, T]
+    perf_loss_pct: np.ndarray
+    dram_power_savings_pct: np.ndarray
+    dram_energy_savings_pct: np.ndarray
+    system_energy_savings_pct: np.ndarray
+    perf_per_watt_gain_pct: np.ndarray
+
+    @property
+    def n_workloads(self) -> int:
+        return len(self.names)
+
+    @property
+    def n_dimms(self) -> int:
+        return len(self.modules)
+
+    def vendor_distribution(self, field: str = "dram_energy_savings_pct"
+                            ) -> dict:
+        """Per-vendor distribution of one [W, D] quantity over every
+        (workload, DIMM) pair: vendor -> {mean, min, p50, max}."""
+        a = getattr(self, field)
+        out = {}
+        for vendor in sorted(set(self.vendors)):
+            cols = [i for i, vd in enumerate(self.vendors) if vd == vendor]
+            x = a[:, cols].reshape(-1)
+            out[vendor] = {"mean": float(x.mean()), "min": float(x.min()),
+                           "p50": float(np.median(x)), "max": float(x.max())}
+        return out
+
+
+def run_fleet_batched(wb: WorkloadBatch, tables: FleetTables,
+                      phases: np.ndarray, coef_lo, coef_hi,
+                      target_loss_pct: float, *, impl: str = "auto",
+                      dispatch: str = "auto", mesh=None,
+                      max_elements_resident: int | None = None
+                      ) -> FleetBatchResult:
+    """Run the interval controller on every (workload, DIMM) pair at once.
+
+    The W x D cross-product flattens into one leading batch axis (lane
+    ``n = w * D + d``): workload features and the [T, W] phase schedule are
+    repeated per DIMM, per-DIMM candidate tables are tiled per workload,
+    and the whole fleet runs as one dispatched ``lax.scan`` through
+    :func:`repro.engine.controller.run_flat` (entry ``"fleet"`` — bucketed
+    to ``n_devices * 2**k``, sharded over the ``("batch",)`` mesh, chunked
+    past the resident budget).  ``dispatch="direct"`` keeps the exact-shape
+    jit call as the parity reference.
+    """
+    w, d = wb.n_workloads, tables.n_dimms
+    feats = {key: np.asarray(a)
+             for key, a in engine_solve._wb_feats(wb).items()}
+    rep_w = lambda a: np.repeat(a, d, axis=0)          # [W,...] -> [W*D,...]
+    tile_d = lambda a: np.tile(a, (w,) + (1,) * (a.ndim - 1))
+    flat_feats = {key: rep_w(a) for key, a in feats.items()}
+    phases_flat = np.repeat(np.asarray(phases), d, axis=1)      # [T, W*D]
+    cand_t = {"t_rcd": tile_d(tables.timings[:, :, 0]),
+              "t_rp": tile_d(tables.timings[:, :, 1]),
+              "t_ras": tile_d(tables.timings[:, :, 2])}
+    out = controller.run_flat(
+        "fleet", flat_feats, phases_flat, coef_lo, coef_hi, target_loss_pct,
+        tables.cand_v, tile_d(tables.lat_feat), cand_t, tile_d(tables.valid),
+        impl=impl, dispatch=dispatch, mesh=mesh,
+        max_elements_resident=max_elements_resident)
+    selected = np.asarray(tables.cand_v, np.float64)[out["selected_idx"]]
+    shape2 = lambda a: a.reshape(w, d)
+    return FleetBatchResult(
+        wb.names, tables.modules, tables.vendors, tables.cand_v,
+        selected.reshape(w, d, -1),
+        shape2(out["perf_loss_pct"]),
+        shape2(out["dram_power_savings_pct"]),
+        shape2(out["dram_energy_savings_pct"]),
+        shape2(out["system_energy_savings_pct"]),
+        shape2(out["perf_per_watt_gain_pct"]))

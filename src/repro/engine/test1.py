@@ -354,9 +354,8 @@ def run_batch(grid: DimmGrid, v_grid,
 # --------------------------------------------------------------------------
 # Batched Section 4.2 latency grid search
 # --------------------------------------------------------------------------
-@jax.jit
-def _min_latency_flat(x_rcd, x_rp, field_max, v, recovery_floor, fail_floor,
-                      lat_grid):
+def _min_latency_flat_fn(x_rcd, x_rp, field_max, v, recovery_floor,
+                         fail_floor, lat_grid, valid):
     """Masked-argmin latency search over the flat N = D*V batch.
 
     ``x_rcd``/``x_rp`` [N, G] are the cell-threshold z-scores of each
@@ -364,7 +363,9 @@ def _min_latency_flat(x_rcd, x_rp, field_max, v, recovery_floor, fail_floor,
     cell clears the truncated support (``x - max(field) >= CELL_XMAX`` —
     ``_trunc_phi`` is monotone, so the worst cell decides).  Ties resolve by
     flat row-major argmin: min (tRCD + tRP), then min tRCD, then min tRP —
-    the documented ``dram.test1.find_min_latency`` order.
+    the documented ``dram.test1.find_min_latency`` order.  ``valid`` [N] is
+    the dispatch lane mask (dead lanes land on 0.0 — NaN is a *real*
+    "unrecoverable" result, so padded lanes must not fake one).
     """
     ok_rcd = x_rcd - field_max[:, None] >= chips.CELL_XMAX      # [N, G]
     ok_rp = x_rp - field_max[:, None] >= chips.CELL_XMAX
@@ -377,12 +378,17 @@ def _min_latency_flat(x_rcd, x_rp, field_max, v, recovery_floor, fail_floor,
     found = jnp.isfinite(jnp.min(score, axis=1))
     t_rcd = jnp.where(found, lat_grid[best // g], jnp.nan)
     t_rp = jnp.where(found, lat_grid[best % g], jnp.nan)
-    return jnp.stack([t_rcd, t_rp], axis=-1)
+    out = jnp.stack([t_rcd, t_rp], axis=-1)
+    return {"lat": jnp.where(valid[:, None], out, 0.0)}
+
+
+_min_latency_flat = jax.jit(_min_latency_flat_fn)
 
 
 def find_min_latency_batch(grid: DimmGrid, v_grid, *, step: float = 2.5,
                            max_latency: float = 20.0, temp_c: float = 20.0,
-                           mesh=None, impl: str = "auto") -> np.ndarray:
+                           mesh=None, impl: str = "auto",
+                           dispatch: str = "auto") -> np.ndarray:
     """Smallest error-free (tRCD, tRP) per (DIMM, voltage): float64
     [D, V, 2], NaN pairs where no latency <= ``max_latency`` recovers
     correct operation (or the voltage is below the vendor recovery floor).
@@ -394,6 +400,13 @@ def find_min_latency_batch(grid: DimmGrid, v_grid, *, step: float = 2.5,
     the flat D x V axis.  Tie-breaking matches the documented
     ``dram.test1.find_min_latency`` order (min sum, then min tRCD, then
     min tRP).
+
+    ``dispatch="auto"`` routes the flat D x V axis through
+    :mod:`repro.engine.dispatch` — the fleet layer issues one request per
+    candidate-table build, with D and V varying per request, so warm AOT
+    executable reuse (``dispatch.stats("min_latency")``) replaces the
+    retrace-per-shape behavior of the old private exact-shape jit;
+    ``"direct"`` keeps the exact-shape call as the parity reference.
     """
     v = np.atleast_1d(np.asarray(v_grid, np.float64))
     lat = np.arange(10.0, float(max_latency) + 1e-9, float(step))
@@ -412,6 +425,8 @@ def find_min_latency_batch(grid: DimmGrid, v_grid, *, step: float = 2.5,
         return out
     if impl not in ("auto", "batched"):
         raise ValueError(f"unknown impl {impl!r}")
+    if dispatch not in ("auto", "bucketed", "chunked", "direct"):
+        raise ValueError(f"unknown dispatch {dispatch!r}")
 
     req = population.required_latency32(grid, v, float(temp_c))
     # the scalar path passes the float64 grid latency into
@@ -437,16 +452,28 @@ def find_min_latency_batch(grid: DimmGrid, v_grid, *, step: float = 2.5,
     ]
     mesh = mesh_lib.make_batch_mesh() if mesh is None else mesh
     n_devices = int(mesh.devices.size)
-    inputs, n_pad = population._pad_flat(inputs, n_devices)
     # float64 end to end (like characterize_batch): the scalar decision is
     # made on float64 thresholds, so the batched one must not round to f32
     with enable_x64():
-        args = [jnp.asarray(a) for a in inputs]
-        if n_devices > 1:
-            args = [jax.device_put(a, mesh_lib.batch_sharding(mesh, a.ndim))
-                    for a in args]
-        out = np.asarray(_min_latency_flat(*args, jnp.asarray(lat)),
-                         np.float64)
-    if n_pad:
-        out = out[:-n_pad]
+        if dispatch == "direct":
+            inputs, n_pad = population._pad_flat(inputs, n_devices)
+            args = [jnp.asarray(a) for a in inputs]
+            valid = jnp.ones((args[0].shape[0],), bool)
+            if n_devices > 1:
+                args = [jax.device_put(a,
+                                       mesh_lib.batch_sharding(mesh, a.ndim))
+                        for a in args]
+                valid = jax.device_put(valid,
+                                       mesh_lib.batch_sharding(mesh, 1))
+            out = np.asarray(
+                _min_latency_flat(*args, jnp.asarray(lat), valid)["lat"],
+                np.float64)
+            if n_pad:
+                out = out[:-n_pad]
+        else:
+            res = dispatch_lib.dispatch_flat(
+                "min_latency", _min_latency_flat_fn, inputs, (lat,),
+                mesh=mesh, element_cost=8 * lat.size * lat.size,
+                mode=dispatch)
+            out = np.asarray(res["lat"], np.float64)
     return out.reshape(d_, v_, 2)

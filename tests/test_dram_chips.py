@@ -37,6 +37,42 @@ def test_higher_latency_removes_errors():
     assert d.line_error_fraction(v, 12.5, 12.5)[0] == 0.0
 
 
+def test_crit_op_uses_per_op_reliable_minimum(monkeypatch):
+    """Regression: ``_crit_op`` compared *both* raw-latency curves against
+    the tRCD reliable minimum (benign only while tRCD and tRP minima
+    coincide at 10 ns).  Skewing one op's threshold must flip the critical
+    op accordingly — each curve against its own threshold."""
+    from repro.dram import timing
+    fresh = lambda: chips.DIMM(*chips.TABLE7[0], index=0)
+    # an unreachable tRP threshold: rp never crosses -> rcd is critical
+    monkeypatch.setattr(timing, "RELIABLE_MIN_NOMINAL",
+                        timing.TimingParams(t_rcd=10.0, t_rp=1e9))
+    assert fresh()._crit_op == "rcd"
+    # and symmetrically (the old code returned "rcd" here too)
+    monkeypatch.setattr(timing, "RELIABLE_MIN_NOMINAL",
+                        timing.TimingParams(t_rcd=1e9, t_rp=10.0))
+    assert fresh()._crit_op == "rp"
+
+
+def test_beat_error_distribution_threads_temp(monkeypatch):
+    """Regression: ``beat_error_distribution`` pinned temp_c=20 while
+    ``line_error_fraction`` accepts it.  At 70 C a Vendor-C DIMM fails
+    lines at voltages that are error-free at 20 C (Fig. 10), and the beat
+    densities must see that."""
+    d = [x for x in chips.population() if x.module == "C2"][0]
+    v = 1.275                    # error-free at 20 C, failing at 70 C
+    assert d.line_error_fraction(v)[0] == 0.0
+    assert d.line_error_fraction(v, temp_c=70.0)[0] > 0.0
+    cold = d.beat_error_distribution(v)
+    hot = d.beat_error_distribution(v, temp_c=70.0)
+    assert float(np.atleast_1d(cold["zero"])[0]) == 1.0
+    assert float(np.atleast_1d(hot["zero"])[0]) < 1.0
+    # explicit 20 C == the default (unchanged behavior)
+    explicit = d.beat_error_distribution(v, temp_c=20.0)
+    for k in ("zero", "one", "two", "many"):
+        np.testing.assert_array_equal(cold[k], explicit[k])
+
+
 def test_beat_density_defeats_secded():
     """Fig. 9: failing beats are predominantly >2-bit."""
     d = [x for x in chips.population() if x.module == "C2"][0]

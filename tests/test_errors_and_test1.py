@@ -64,6 +64,22 @@ class TestSecded:
         total = o.clean + o.corrected + o.detected + o.undetected_or_mis
         np.testing.assert_allclose(total, 1.0, atol=1e-9)
 
+    def test_temp_threads_into_ecc_analysis(self):
+        """Regression: secded_outcomes/secded_is_sufficient silently pinned
+        temp_c=20 — the ECC analysis must compose with the Section 5.3
+        temperature scenarios.  C2 at 1.275 V is clean at 20 C but failing
+        at 70 C (Fig. 10)."""
+        d = _dimm("C2")
+        cold = errors.secded_outcomes(d, 1.275)
+        hot = errors.secded_outcomes(d, 1.275, temp_c=70.0)
+        assert cold.clean == 1.0 and cold.still_erroneous == 0.0
+        assert hot.clean < 1.0 and hot.still_erroneous > 0.0
+        assert errors.secded_is_sufficient(d, 1.275)
+        assert not errors.secded_is_sufficient(d, 1.275, temp_c=70.0)
+        # default unchanged
+        explicit = errors.secded_outcomes(d, 1.275, temp_c=20.0)
+        assert explicit == cold
+
 
 class TestPatternGroups:
     def test_groups_are_true_inverses(self):

@@ -1,0 +1,300 @@
+"""Fleet-scale Voltron: per-DIMM safe candidate tables, the W x D
+controller cross-product, and the dispatched min-latency search.
+
+Invariants under test:
+
+- candidates are excluded exactly where ``find_min_latency_batch`` returns
+  NaN (and never below a vendor's recovery floor);
+- each DIMM's safe voltage floor is non-increasing as the allowed latency
+  grows;
+- fleet lane (w, d) is bit-equal (selections) / <= 1e-12 (metrics) to a
+  per-DIMM ``run_suite`` call on that DIMM's table;
+- fleet requests reuse warm AOT executables across shapes
+  (``dispatch.stats("fleet")``), and ``find_min_latency_batch`` no longer
+  retraces per shape.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import perf_model, voltron
+from repro.dram import circuit
+from repro.engine import dispatch, fleet
+from repro.engine import test1 as engine_test1
+from repro.memsim import workloads
+
+MODULES = ("A1", "B2", "C2")
+METRIC_FIELDS = ("perf_loss_pct", "dram_power_savings_pct",
+                 "dram_energy_savings_pct", "system_energy_savings_pct",
+                 "perf_per_watt_gain_pct")
+ATOL = 1e-12
+
+
+@pytest.fixture(scope="module")
+def grid():
+    return engine.DimmGrid.from_population(MODULES)
+
+
+@pytest.fixture(scope="module")
+def tables(grid):
+    return voltron.fleet_tables(grid)
+
+
+@pytest.fixture(scope="module")
+def model():
+    return perf_model.fit()
+
+
+@pytest.fixture(scope="module")
+def wls():
+    homog = workloads.homogeneous_workloads()
+    mem = [x for x in homog if x[1][0].memory_intensive]
+    non = [x for x in homog if not x[1][0].memory_intensive]
+    return [mem[0], non[0]]
+
+
+class TestFleetTables:
+    def test_excluded_exactly_where_min_latency_nan(self, grid, tables):
+        minlat = engine_test1.find_min_latency_batch(grid, tables.cand_v)
+        np.testing.assert_array_equal(tables.valid,
+                                      np.isfinite(minlat).all(axis=-1))
+        # invalid candidates carry NaN timings, valid ones the measured pair
+        np.testing.assert_array_equal(
+            np.isfinite(tables.timings).all(axis=-1), tables.valid)
+        np.testing.assert_array_equal(tables.timings[..., :2][tables.valid],
+                                      minlat[tables.valid])
+
+    def test_no_candidate_below_recovery_floor(self, tables):
+        for di, vd in enumerate(tables.vendors):
+            below = tables.cand_v < circuit.VENDORS[vd].recovery_floor
+            assert not tables.valid[di, below].any(), tables.modules[di]
+
+    def test_fallback_valid_on_every_dimm(self, tables):
+        assert tables.valid[:, -1].all()
+        assert np.isfinite(tables.timings[:, -1]).all()
+
+    def test_safe_vmin_non_increasing_as_latency_grows(self, grid, tables):
+        floors = [fleet.build_tables(grid, tables.cand_v,
+                                     max_latency=ml).safe_vmin
+                  for ml in (10.0, 12.5, 20.0)]
+        assert (floors[1] <= floors[0]).all()
+        assert (floors[2] <= floors[1]).all()
+        # the extra latency headroom genuinely unlocks lower voltages
+        assert (floors[2] < floors[0]).any()
+
+    def test_vendor_c_floors_highest(self, tables):
+        """Section 4.2: Vendor C needs the highest safe voltages."""
+        by_vendor = {vd: tables.safe_vmin[[i for i, x in
+                                           enumerate(tables.vendors)
+                                           if x == vd]].min()
+                     for vd in set(tables.vendors)}
+        assert by_vendor["C"] > by_vendor["A"]
+        assert by_vendor["C"] > by_vendor["B"]
+
+    def test_ascending_candidates_required(self, grid):
+        with pytest.raises(ValueError, match="ascending"):
+            fleet.build_tables(grid, [1.2, 1.1])
+
+    def test_select_roundtrip(self, tables):
+        sub = tables.select(("C2", "A1"))
+        assert sub.modules == ("C2", "A1")
+        ci = tables.modules.index("C2")
+        np.testing.assert_array_equal(sub.timings[0], tables.timings[ci])
+        np.testing.assert_array_equal(sub.valid[0], tables.valid[ci])
+
+
+class TestMinLatencyDispatch:
+    V = [1.25, 1.15, 1.075, 1.05]      # spans recovery floors -> NaNs
+
+    def test_dispatched_matches_direct_and_scalar(self, grid):
+        a = engine_test1.find_min_latency_batch(grid, self.V)
+        d = engine_test1.find_min_latency_batch(grid, self.V,
+                                                dispatch="direct")
+        s = engine_test1.find_min_latency_batch(grid, self.V, impl="scalar")
+        np.testing.assert_array_equal(a, d)
+        np.testing.assert_array_equal(a, s)
+        assert np.isnan(a).any() and np.isfinite(a).any()
+
+    def test_same_bucket_single_trace(self, grid):
+        """Two differently-shaped requests in one bucket => one compile —
+        the ROADMAP item: no more private exact-shape jit retracing per
+        fleet request shape."""
+        dispatch.clear_cache()
+        dispatch.reset_stats()
+        engine_test1.find_min_latency_batch(
+            grid, [1.2, 1.15, 1.1, 1.05, 1.0])            # N = 15 -> 16
+        engine_test1.find_min_latency_batch(
+            grid.select(("A1", "B2")),
+            [1.3, 1.25, 1.2, 1.15, 1.1, 1.05, 1.0])       # N = 14 -> 16
+        s = dispatch.stats("min_latency")
+        assert s["calls"] == 2
+        assert s["compiles"] == 1
+        assert s["hits"] == 1
+
+    def test_unknown_dispatch_rejected(self, grid):
+        with pytest.raises(ValueError):
+            engine_test1.find_min_latency_batch(grid, [1.2],
+                                                dispatch="banana")
+
+
+class TestFleetController:
+    def test_bit_equal_to_per_dimm_run_suite(self, tables, wls, model):
+        """The 2-DIMM x 2-workload parity grid: every fleet lane (w, d)
+        reproduces a per-DIMM run_suite call on that DIMM's table."""
+        sub = tables.select(("A1", "C2"))
+        res = voltron.run_fleet(wls, tables=sub, n_intervals=4, model=model)
+        for di, m in enumerate(sub.modules):
+            suite = voltron.run_suite(wls, n_intervals=4, model=model,
+                                      tables=sub.select([m]))
+            for wi, r in enumerate(suite):
+                np.testing.assert_array_equal(
+                    res.selected_voltages[wi, di], r.selected_voltages,
+                    err_msg=f"{m}/{r.workload}")
+                for f in METRIC_FIELDS:
+                    np.testing.assert_allclose(
+                        getattr(res, f)[wi, di], getattr(r, f), atol=ATOL,
+                        err_msg=f"{m}/{r.workload}/{f}")
+
+    def test_dispatched_matches_direct(self, tables, wls, model):
+        a = voltron.run_fleet(wls, tables=tables, n_intervals=3,
+                              model=model)
+        d = voltron.run_fleet(wls, tables=tables, n_intervals=3,
+                              model=model, dispatch="direct")
+        np.testing.assert_array_equal(a.selected_voltages,
+                                      d.selected_voltages)
+        for f in METRIC_FIELDS:
+            np.testing.assert_allclose(getattr(a, f), getattr(d, f),
+                                       atol=ATOL, err_msg=f)
+
+    def test_warm_executable_reuse_across_fleet_shapes(self, tables, wls,
+                                                       model):
+        """Acceptance: a second *differently-shaped* fleet request lands in
+        the same canonical bucket and reuses the warm executable."""
+        dispatch.clear_cache()
+        dispatch.reset_stats()
+        # 2 workloads x 3 DIMMs and 3 workloads x 2 DIMMs: different
+        # request shapes, same flat bucket (6 -> 8)
+        voltron.run_fleet(wls, tables=tables, n_intervals=3, model=model)
+        voltron.run_fleet(wls + wls[:1], tables=tables.select(("A1", "C2")),
+                          n_intervals=3, model=model)
+        s = dispatch.stats("fleet")
+        assert s["calls"] == 2
+        assert s["compiles"] == 1
+        assert s["hits"] >= 1
+
+    def test_chunked_mode_reaches_dispatcher(self, tables, wls, model):
+        """Regression: run_flat accepted dispatch="chunked" but never
+        forwarded the mode, silently running the bucketed path."""
+        dispatch.reset_stats()
+        a = voltron.run_fleet(wls, tables=tables, n_intervals=3,
+                              model=model, dispatch="chunked")
+        d = voltron.run_fleet(wls, tables=tables, n_intervals=3,
+                              model=model, dispatch="direct")
+        assert dispatch.stats("fleet")["chunked_calls"] == 1
+        np.testing.assert_array_equal(a.selected_voltages,
+                                      d.selected_voltages)
+        for f in METRIC_FIELDS:
+            np.testing.assert_allclose(getattr(a, f), getattr(d, f),
+                                       atol=ATOL, err_msg=f)
+
+    def test_selections_respect_exclusions(self, tables, wls, model):
+        """Even with a permissive loss target the controller never selects
+        a candidate the DIMM cannot run error-free: each DIMM floors at
+        its characterized safe voltage."""
+        res = voltron.run_fleet(wls, tables=tables, n_intervals=5,
+                                model=model, target_loss_pct=50.0)
+        for di in range(tables.n_dimms):
+            allowed = set(tables.cand_v[tables.valid[di]])
+            chosen = set(np.unique(res.selected_voltages[:, di]))
+            assert chosen <= allowed, tables.modules[di]
+            assert (res.selected_voltages[:, di].min()
+                    >= tables.safe_vmin[di])
+
+    def test_vendor_distribution_shape(self, tables, wls, model):
+        res = voltron.run_fleet(wls, tables=tables, n_intervals=3,
+                                model=model)
+        dist = res.vendor_distribution()
+        assert set(dist) == set(tables.vendors)
+        for d in dist.values():
+            assert d["min"] <= d["p50"] <= d["max"]
+
+    def test_run_fleet_rejects_build_args_with_explicit_tables(self, tables,
+                                                               wls):
+        with pytest.raises(ValueError, match="fleet_tables"):
+            voltron.run_fleet(wls, n_intervals=2, tables=tables,
+                              temp_c=70.0)
+
+    def test_run_suite_rejects_multi_dimm_tables(self, tables, wls):
+        with pytest.raises(ValueError, match="single-DIMM"):
+            voltron.run_suite(wls, n_intervals=2, tables=tables)
+
+    def test_run_suite_rejects_bank_locality_with_tables(self, tables, wls):
+        with pytest.raises(ValueError, match="bank_locality"):
+            voltron.run_suite(wls, n_intervals=2, bank_locality=True,
+                              tables=tables.select(("A1",)))
+
+
+@pytest.mark.slow
+def test_multidevice_controller_and_fleet_mesh_divisible():
+    """8 forced host devices: the controller's bucketed W axis and the
+    fleet's W x D axis both pad to mesh-divisible ``n_devices * 2**k``
+    buckets (regression: the old path hardcoded ``bucket_ladder(1)``) and
+    match the direct exact-shape calls."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=8"
+        os.environ["JAX_PLATFORMS"] = "cpu"
+        import sys
+        sys.path.insert(0, "src")
+        import numpy as np
+        import jax
+        from repro import engine
+        from repro.core import perf_model, voltron
+        from repro.engine import dispatch
+        from repro.memsim import workloads
+
+        assert len(jax.devices()) == 8
+        wls = workloads.homogeneous_workloads()[:3]
+        model = perf_model.fit()
+        wb = engine.WorkloadBatch.from_workloads(wls)
+        phases = voltron._phase_matrix(
+            wb.names, 4, voltron.DEFAULT_INTERVAL_CYCLES, None, 0.15)
+        cand_v, lat_feat, timings = voltron._candidate_grid(False)
+        args = (wb, phases, model.coef_low, model.coef_high, 5.0, cand_v,
+                lat_feat, timings)
+        got = engine.run_batched(*args)
+        ref = engine.run_batched(*args, dispatch="direct")
+        np.testing.assert_array_equal(got.selected_voltages,
+                                      ref.selected_voltages)
+        for f in ("perf_loss_pct", "dram_energy_savings_pct",
+                  "perf_per_watt_gain_pct"):
+            np.testing.assert_allclose(getattr(got, f), getattr(ref, f),
+                                       atol=1e-12, err_msg=f)
+        # W=3 pads to 8 (not 4): buckets stay divisible by the 8-way mesh
+        assert dispatch.stats("controller_scan")["max_resident"] % 8 == 0
+
+        grid = engine.DimmGrid.from_population(("A1", "B2", "C2"))
+        tables = voltron.fleet_tables(grid)
+        assert dispatch.stats("min_latency")["max_resident"] % 8 == 0
+        a = voltron.run_fleet(wls, tables=tables, n_intervals=3,
+                              model=model)
+        d = voltron.run_fleet(wls, tables=tables, n_intervals=3,
+                              model=model, dispatch="direct")
+        np.testing.assert_array_equal(a.selected_voltages,
+                                      d.selected_voltages)
+        np.testing.assert_allclose(a.perf_loss_pct, d.perf_loss_pct,
+                                   atol=1e-12)
+        assert dispatch.stats("fleet")["max_resident"] % 8 == 0
+        print("FLEET_SHARDED_OK")
+    """)
+    out = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        timeout=600, cwd=os.path.dirname(os.path.dirname(__file__)),
+        env=dict(os.environ))
+    assert "FLEET_SHARDED_OK" in out.stdout, out.stderr[-3000:]
