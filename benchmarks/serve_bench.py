@@ -1,0 +1,184 @@
+"""Streaming fleet service throughput: the coalescing front-end vs the
+request-at-a-time loop, under bursty open-loop load.
+
+Acceptance measurements for the serving layer
+(:mod:`repro.engine.service`):
+
+1. **Open loop vs serial** — a seeded stream of mixed
+   min-latency / fleet-controller requests over a characterized
+   sub-fleet, driven at a fixed offered rate (a multiple of the measured
+   serial baseline, in bursts) through ``EngineService.submit``.  The
+   coalescer packs each batching window into one warm dispatch, so
+   sustained RPS must reach >= 5x the request-at-a-time loop with bounded
+   p50/p99 (latency measured from the *scheduled* arrival — backlog is
+   charged to the service).  The gated metric is
+   ``open_loop.speedup_vs_serial``: a same-machine throughput ratio over
+   a multi-second window, the hardware-robust form the gate convention
+   requires (absolute RPS and percentile milliseconds are reported for
+   trajectory tracking but not gated).
+
+2. **Overload / admission** — the same service shape with a tiny
+   admission budget under a concurrent burst: some requests must shed
+   (typed ``AdmissionError``), every admitted one must complete, and the
+   recorded peak queue occupancy must never pass the budget (the
+   ``admission.violations == 0`` acceptance).
+
+``python -m benchmarks.serve_bench [OUT.json]`` writes the metrics as a
+JSON artifact (``scripts/check.sh`` stores it as
+``artifacts/BENCH_serve.json`` and gates regressions against the
+committed baseline).
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import sys
+
+import numpy as np
+
+MODULES = ("A1", "A3", "B1", "B2", "C1", "C2")
+N_WORKLOADS = 6
+N_REQUESTS = 128
+RATE_MULT = 20.0          # offered rate as a multiple of the serial RPS
+BURST = 8
+REPEATS = 3               # best-of-N for both phases (standard bench
+                          # practice: jitter on shared runners is one-sided)
+WINDOW_S = 2e-3
+MIN_SPEEDUP = 5.0         # the serving-layer acceptance bar
+
+LANE_COST = 8 * 5 * 5     # min-latency element cost at the default G=5
+SHED_BUDGET_LANES = 6
+N_OVERLOAD = 24
+
+
+def _measure() -> dict:
+    from repro.core import perf_model, voltron
+    from repro.engine import service as service_lib
+    from repro.engine.population import DimmGrid
+    from repro.launch import fleet_serve
+    from repro.memsim import workloads
+
+    grid = DimmGrid.from_population(MODULES)
+    tables = voltron.fleet_tables(grid)
+    wls = workloads.homogeneous_workloads()[:N_WORKLOADS]
+    model = perf_model.fit()
+
+    # -- open loop vs the request-at-a-time baseline -----------------------
+    service = service_lib.EngineService(
+        grid, tables=tables, workloads=wls, model=model,
+        config=service_lib.ServiceConfig(window_s=WINDOW_S,
+                                         max_batch_lanes=64,
+                                         admission="queue"))
+    rng = np.random.default_rng(0)
+    reqs = fleet_serve.request_mix(rng, N_REQUESTS, MODULES,
+                                   service.workload_names)
+    service.prewarm(reqs)
+    serial = max((fleet_serve.serial_loop(service, reqs)
+                  for _ in range(REPEATS)), key=lambda r: r["rps"])
+    rate = RATE_MULT * serial["rps"]
+    open_res = max((asyncio.run(fleet_serve.open_loop(service, reqs,
+                                                      rate=rate,
+                                                      burst=BURST))
+                    for _ in range(REPEATS)), key=lambda r: r["rps"])
+    st = service.stats()
+    open_res["speedup_vs_serial"] = open_res["rps"] / serial["rps"]
+
+    # -- overload: shed past a tiny budget, never exceed it ----------------
+    budget = SHED_BUDGET_LANES * LANE_COST
+    shed_service = service_lib.EngineService(
+        grid, tables=tables, workloads=wls, model=model,
+        config=service_lib.ServiceConfig(window_s=5e-3, admission="shed",
+                                         max_queue_elements=budget))
+    voltages = np.round(np.arange(0.90, 1.31, 0.05), 2)
+    overload = [service_lib.MinLatencyRequest(
+        str(rng.choice(MODULES)), (float(rng.choice(voltages)),))
+        for _ in range(N_OVERLOAD)]
+
+    async def drive():
+        out = await asyncio.gather(
+            *(shed_service.submit(r) for r in overload),
+            return_exceptions=True)
+        await shed_service.drain()
+        return out
+
+    outs = asyncio.run(drive())
+    sheds = sum(isinstance(o, service_lib.AdmissionError) for o in outs)
+    other = sum(isinstance(o, Exception)
+                and not isinstance(o, service_lib.AdmissionError)
+                for o in outs)
+    shed_st = shed_service.stats()
+
+    return {
+        "n_requests": N_REQUESTS,
+        "serial": serial,
+        "open_loop": open_res,
+        "coalescing": {
+            "flushes": st["flushes"],
+            "flushed_lanes": st["flushed_lanes"],
+            "max_flush_lanes": st["max_flush_lanes"],
+            "max_queue_depth": st["max_queue_depth"],
+        },
+        "admission": {
+            "budget_elements": budget,
+            "n_offered": N_OVERLOAD,
+            "sheds": sheds,
+            "completed": shed_st["completed"],
+            "other_errors": other,
+            "max_queued_elements": shed_st["max_queued_elements"],
+            "violations": max(0, shed_st["max_queued_elements"] - budget),
+        },
+    }
+
+
+def _accept(m: dict) -> bool:
+    o, a = m["open_loop"], m["admission"]
+    return (o["speedup_vs_serial"] >= MIN_SPEEDUP
+            and o["completed"] == m["n_requests"]
+            and not o["errors"]
+            and np.isfinite(o["p99_ms"])
+            and a["sheds"] >= 1
+            and a["sheds"] + a["completed"] == a["n_offered"]
+            and a["other_errors"] == 0
+            and a["violations"] == 0)
+
+
+def serve_sweep():
+    m = _measure()
+    o, a, c = m["open_loop"], m["admission"], m["coalescing"]
+    ok = _accept(m)
+    return [
+        ("serve/open_loop",
+         f"{o['rps']:.0f} req/s sustained of {o['offered_rps']:.0f} "
+         f"offered (p50 {o['p50_ms']:.1f}ms, p99 {o['p99_ms']:.1f}ms)",
+         f"{o['speedup_vs_serial']:.1f}x vs serial {m['serial']['rps']:.0f} "
+         f"req/s; {c['flushes']} flushes, max {c['max_flush_lanes']} "
+         f"lanes/flush, accept={ok}"),
+        ("serve/admission",
+         f"{a['sheds']} shed of {a['n_offered']} past a "
+         f"{a['budget_elements']}-element budget",
+         f"peak {a['max_queued_elements']} elements, "
+         f"violations={a['violations']}"),
+    ]
+
+
+# separates serial/open-loop phases internally; a second harness pass
+# would only double its cost, not produce a warm steady state
+serve_sweep.self_timed = True
+
+
+def main() -> None:
+    from repro.engine import dispatch
+    dispatch.enable_persistent_cache()
+    m = _measure()
+    print(json.dumps(m, indent=2))
+    if len(sys.argv) > 1:
+        with open(sys.argv[1], "w") as f:
+            json.dump(m, f, indent=2)
+        print(f"wrote {sys.argv[1]}", file=sys.stderr)
+    if not _accept(m):
+        print("ACCEPTANCE FAILURE", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -32,5 +32,11 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.fleet_bench artifacts/BENCH_fleet.json
 
+# streaming fleet service: coalesced open-loop throughput vs the
+# request-at-a-time loop + admission acceptance (exits nonzero below the
+# 5x serving bar or on any budget violation)
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.serve_bench artifacts/BENCH_serve.json
+
 # steady-state throughput gate vs the committed baselines (>30% fails)
 python scripts/bench_gate.py artifacts benchmarks/baselines

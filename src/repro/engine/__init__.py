@@ -89,6 +89,38 @@ parity reference).  The contract:
   (``launch.mesh.batch_sharding`` / ``chunked_batch_sharding``) always
   splits evenly — never re-pad a bucketed batch for the mesh.
 
+The serving contract
+====================
+
+:mod:`repro.engine.service` puts a streaming front-end over the warm
+engine: ``EngineService.submit`` (async) accepts a continuous stream of
+``MinLatencyRequest`` / ``CharacterizeRequest`` / ``FleetRequest`` and
+coalesces concurrent requests into bucket-sized megabatches — groups are
+keyed by everything that must match for lanes to share one dispatch
+(entry point, replicated operands, statics), and a group flushes on the
+batching window (``ServiceConfig.window_s``) or the size trigger
+(``max_batch_lanes`` / the resident-budget bucket), whichever fires
+first.  The contract:
+
+- **Parity:** a coalesced lane is bit-identical to the same request
+  served alone (``run_request``, the request-at-a-time baseline) for the
+  float64 entry points and the fleet voltage selections; the fleet's
+  float32 derived metrics agree to XLA's shape-dependent vectorization
+  tolerance (~1e-6 relative across bucket rungs).
+- **Admission:** every admitted request reserves ``lanes x
+  element_cost`` against ``ServiceConfig.max_queue_elements``; past the
+  budget, ``admission="shed"`` fails fast with ``AdmissionError`` and
+  ``admission="queue"`` suspends the caller.  Occupancy never exceeds
+  the budget.
+- **Live tables:** fleet requests resolve their per-DIMM safe-voltage
+  rows at flush time; ``drop_table`` mid-stream fails that DIMM's
+  queued/future requests fast with ``TableUnavailableError`` while
+  unrelated lanes complete, and ``fleet.build_tables`` +
+  ``install_tables`` restores service without a restart.
+
+``launch.fleet_serve`` drives the service under bursty open-loop load;
+``benchmarks/serve_bench.py`` gates the coalescing speedup.
+
 Scalar-wrapper compatibility
 ============================
 
@@ -115,6 +147,11 @@ from repro.engine.fleet import (FleetBatchResult,  # noqa: F401
                                 run_fleet_batched)
 from repro.engine.population import (CharacterizationBatch,  # noqa: F401
                                      DimmGrid, characterize_batch)
+from repro.engine.service import (AdmissionError,  # noqa: F401
+                                  CharacterizeRequest, EngineService,
+                                  FleetRequest, MinLatencyRequest,
+                                  ServiceConfig, ServiceError,
+                                  TableUnavailableError)
 from repro.engine.solve import (BatchResult, ComparisonBatch,  # noqa: F401
                                 evaluate_batch, simulate_batch)
 from repro.engine.test1 import Test1Batch  # noqa: F401

@@ -185,6 +185,37 @@ def _controller_flat_fn(*args, impl: str):
                                impl=impl)
 
 
+def element_cost(n_intervals: int) -> int:
+    """Per-lane dispatch footprint of the interval scan, in element-cost
+    units — shared by ``run_flat`` and the serving front-end so admission
+    accounting matches what dispatch actually charges."""
+    return 16 * max(1, int(n_intervals))
+
+
+def flat_operands(feats: dict, phases, coef_lo, coef_hi, target_loss_pct,
+                  cand_v, lat_feat, cand_t: dict, cand_valid) -> tuple:
+    """Lower interval-scan operands to ``dispatch_flat`` form.
+
+    Returns ``(batched, replicated)`` exactly as ``run_flat`` passes them:
+    batched = the 9 ``_FEAT_KEYS`` float32 feature arrays, the [N, T]
+    transposed phase schedule, latency features, the three candidate-timing
+    tables and the validity mask; replicated = (coef_lo, coef_hi, target,
+    cand_v) float32.  The serving front-end concatenates these per-lane
+    arrays across requests, so the float32 conversions must happen here —
+    once, identically — for coalesced lanes to stay bit-exact against the
+    per-request path."""
+    f32 = lambda x: np.asarray(x, np.float32)
+    feats = {k: f32(feats[k]) for k in _FEAT_KEYS}
+    phases = f32(phases)
+    cand_t = {k: f32(cand_t[k]) for k in ("t_rcd", "t_rp", "t_ras")}
+    batched = [feats[k] for k in _FEAT_KEYS] + [
+        np.ascontiguousarray(phases.T), f32(lat_feat), cand_t["t_rcd"],
+        cand_t["t_rp"], cand_t["t_ras"], np.asarray(cand_valid, bool)]
+    replicated = (f32(coef_lo), f32(coef_hi), np.float32(target_loss_pct),
+                  f32(cand_v))
+    return batched, replicated
+
+
 def run_flat(entry: str, feats: dict, phases, coef_lo, coef_hi,
              target_loss_pct, cand_v, lat_feat, cand_t: dict, cand_valid,
              *, impl: str = "auto", dispatch: str = "auto", mesh=None,
@@ -207,34 +238,30 @@ def run_flat(entry: str, feats: dict, phases, coef_lo, coef_hi,
     """
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "reference"
-    f32 = lambda x: np.asarray(x, np.float32)
-    feats = {k: f32(feats[k]) for k in _FEAT_KEYS}
-    phases = f32(phases)
-    cand_t = {k: f32(cand_t[k]) for k in ("t_rcd", "t_rp", "t_ras")}
-    lat_feat = f32(lat_feat)
-    cand_valid = np.asarray(cand_valid, bool)
-    coef_lo, coef_hi, cand_v = f32(coef_lo), f32(coef_hi), f32(cand_v)
-    target = np.float32(target_loss_pct)
+    batched, replicated = flat_operands(feats, phases, coef_lo, coef_hi,
+                                        target_loss_pct, cand_v, lat_feat,
+                                        cand_t, cand_valid)
+    coef_lo, coef_hi, target, cand_v = replicated
+    n_intervals = batched[9].shape[1]
 
     if dispatch == "direct":
         out = _controller_scan(
-            {k: jnp.asarray(v) for k, v in feats.items()},
-            jnp.asarray(phases), coef_lo, coef_hi, target, cand_v,
-            jnp.asarray(lat_feat),
-            {k: jnp.asarray(v) for k, v in cand_t.items()},
-            jnp.asarray(cand_valid), impl=impl)
+            dict(zip(_FEAT_KEYS, (jnp.asarray(a) for a in batched[:9]))),
+            jnp.asarray(batched[9].T), coef_lo, coef_hi, target, cand_v,
+            jnp.asarray(batched[10]),
+            {"t_rcd": jnp.asarray(batched[11]),
+             "t_rp": jnp.asarray(batched[12]),
+             "t_ras": jnp.asarray(batched[13])},
+            jnp.asarray(batched[14]), impl=impl)
     elif dispatch in ("auto", "bucketed", "chunked"):
         cfg = None if max_elements_resident is None else \
             dispatch_lib.DispatchConfig(
                 max_elements_resident=int(max_elements_resident))
-        batched = [feats[k] for k in _FEAT_KEYS] + [
-            np.ascontiguousarray(phases.T), lat_feat, cand_t["t_rcd"],
-            cand_t["t_rp"], cand_t["t_ras"], cand_valid]
         out = dispatch_lib.dispatch_flat(
             entry, functools.partial(_controller_flat_fn, impl=impl),
-            batched, (coef_lo, coef_hi, target, cand_v),
+            batched, replicated,
             statics_key=(impl,), mesh=mesh, mode=dispatch,
-            element_cost=16 * max(1, phases.shape[0]), config=cfg)
+            element_cost=element_cost(n_intervals), config=cfg)
     else:
         raise ValueError(f"unknown dispatch {dispatch!r}")
     out = {k: np.asarray(v) for k, v in out.items()}

@@ -48,6 +48,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import threading
+import time
 import warnings
 
 import jax
@@ -127,18 +128,34 @@ def _leaf_key(x):
 
 def _stats_entry(entry: str) -> dict:
     return _STATS.setdefault(entry, {"calls": 0, "compiles": 0, "hits": 0,
-                                     "chunked_calls": 0, "max_resident": 0})
+                                     "chunked_calls": 0, "max_resident": 0,
+                                     "dispatch_us_total": 0.0,
+                                     "dispatch_us_last": 0.0})
 
 
 def stats(entry: str | None = None) -> dict:
     """Dispatch counters: per entry point ``calls`` / ``compiles`` (actual
     ``lower().compile()`` invocations = traces) / ``hits`` (warm-executable
     reuses) / ``chunked_calls`` / ``max_resident`` (largest resident flat
-    batch actually materialized — the peak-memory proxy)."""
+    batch actually materialized — the peak-memory proxy) /
+    ``dispatch_us_total`` and ``dispatch_us_last`` (blocking wall time of
+    the compiled executions, cumulative and most-recent — compile time is
+    excluded, so reuse *and* steady latency are separately inspectable).
+    Gauges attached via :func:`record_gauge` (e.g. the serving front-end's
+    queue depth) appear alongside the counters."""
     with _LOCK:
         if entry is not None:
             return dict(_stats_entry(entry))
         return {k: dict(v) for k, v in _STATS.items()}
+
+
+def record_gauge(entry: str, **gauges) -> None:
+    """Attach/update observability gauges on an entry's stats row (the
+    serving front-end publishes ``queue_depth``/``queue_elements`` under
+    entry ``"service"``).  ``reset_stats()`` clears gauges with everything
+    else."""
+    with _LOCK:
+        _stats_entry(entry).update(gauges)
 
 
 def reset_stats() -> None:
@@ -199,7 +216,15 @@ def aot_call(entry: str, fn, args: tuple, *, statics_key=(),
     else:
         with _LOCK:
             _stats_entry(entry)["hits"] += 1
-    return compiled(*args)
+    t0 = time.perf_counter()
+    out = compiled(*args)
+    out = jax.block_until_ready(out)
+    us = (time.perf_counter() - t0) * 1e6
+    with _LOCK:
+        s = _stats_entry(entry)
+        s["dispatch_us_total"] += us
+        s["dispatch_us_last"] = us
+    return out
 
 
 # --------------------------------------------------------------------------

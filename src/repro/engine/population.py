@@ -308,9 +308,18 @@ def _pad_flat(arrays: list, n_devices: int) -> tuple:
             for a in arrays], pad
 
 
-def _characterize_batched(grid, v, t_grid, patterns, retention_ms,
-                          t_rcd, t_rp, mesh, dispatch_mode: str = "auto",
-                          max_elements_resident: int | None = None):
+def characterize_inputs(grid: DimmGrid, v, t_grid, patterns, retention_ms,
+                        t_rcd: float, t_rp: float) -> tuple:
+    """Eager per-lane operands of ``_characterize_flat_fn`` for the
+    flattened D x V x T grid: ``(inputs, replicated)``.
+
+    Each lane's values depend only on its own (DIMM, voltage, temperature)
+    — the required latencies resolve per vendor x temperature, the
+    susceptibility field is gathered per lane — never on the batch
+    composition, so the serving front-end can concatenate lanes from
+    different requests and stay bit-exact against the per-request path
+    (``characterize_batch`` shares this exact lowering).
+    """
     d_, v_, t_ = grid.n_dimms, v.size, len(t_grid)
     req = _required_latency_grid(grid, v, t_grid)
 
@@ -326,12 +335,23 @@ def _characterize_batched(grid, v, t_grid, patterns, retention_ms,
         flat(np.asarray(t_grid, np.float64)[None, None, :]),
         field64[d_idx],     # eager gather: shape depends on N alone, not D
     ]
-
-    mesh = mesh_lib.make_batch_mesh() if mesh is None else mesh
-    n_devices = int(mesh.devices.size)
     pattern_h = np.array([chips.pattern_phase(p) for p in patterns],
                          np.float64)
     ret = np.asarray(retention_ms, np.float64)
+    replicated = (pattern_h, ret, np.float64(t_rcd), np.float64(t_rp))
+    return inputs, replicated
+
+
+def _characterize_batched(grid, v, t_grid, patterns, retention_ms,
+                          t_rcd, t_rp, mesh, dispatch_mode: str = "auto",
+                          max_elements_resident: int | None = None):
+    d_, v_, t_ = grid.n_dimms, v.size, len(t_grid)
+    inputs, replicated = characterize_inputs(grid, v, t_grid, patterns,
+                                             retention_ms, t_rcd, t_rp)
+    pattern_h, ret = replicated[0], replicated[1]
+
+    mesh = mesh_lib.make_batch_mesh() if mesh is None else mesh
+    n_devices = int(mesh.devices.size)
     with enable_x64():
         if dispatch_mode == "direct":
             inputs, n_pad = _pad_flat(inputs, n_devices)
@@ -354,8 +374,7 @@ def _characterize_batched(grid, v, t_grid, patterns, retention_ms,
                 dispatch_lib.DispatchConfig(
                     max_elements_resident=int(max_elements_resident))
             out = dispatch_lib.dispatch_flat(
-                "characterize", _characterize_flat_fn, inputs,
-                (pattern_h, ret, np.float64(t_rcd), np.float64(t_rp)),
+                "characterize", _characterize_flat_fn, inputs, replicated,
                 mesh=mesh, element_cost=8 * FIELD_SIZE, mode=dispatch_mode,
                 config=cfg)
             out = {k: np.asarray(a, np.float64) for k, a in out.items()}

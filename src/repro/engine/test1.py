@@ -385,6 +385,45 @@ def _min_latency_flat_fn(x_rcd, x_rp, field_max, v, recovery_floor,
 _min_latency_flat = jax.jit(_min_latency_flat_fn)
 
 
+def min_latency_inputs(grid: DimmGrid, v_grid, *, step: float = 2.5,
+                       max_latency: float = 20.0,
+                       temp_c: float = 20.0) -> tuple:
+    """Eager per-lane operands of ``_min_latency_flat_fn`` for the
+    flattened D x V grid: ``(inputs, lat_grid)``.
+
+    Every array's values depend only on its own (DIMM, voltage) lane —
+    never on the batch composition — which is what lets the serving
+    front-end concatenate lanes from different requests and stay bit-exact
+    against the per-request path (``find_min_latency_batch`` shares this
+    exact lowering).
+    """
+    v = np.atleast_1d(np.asarray(v_grid, np.float64))
+    lat = np.arange(10.0, float(max_latency) + 1e-9, float(step))
+    req = population.required_latency32(grid, v, float(temp_c))
+    # the scalar path passes the float64 grid latency into
+    # line_error_fraction, so the threshold is float64 of a float32 req —
+    # mirror that promotion exactly
+    x = {op: ((lat[None, None, :] / req[op][:, :, None].astype(np.float64)
+               - 1.0) / grid.cell_sigma[:, None, None])
+         for op in ("rcd", "rp")}
+    floors = np.array([circuit.VENDORS[vd].recovery_floor
+                       for vd in grid.vendors])
+    field_max = grid.susceptibility.reshape(grid.n_dimms, -1).max(axis=1)
+
+    d_, v_ = grid.n_dimms, v.size
+    flat = lambda a: np.ascontiguousarray(
+        np.broadcast_to(a, (d_, v_) + a.shape[2:]).reshape(
+            (-1,) + a.shape[2:]))
+    inputs = [
+        flat(x["rcd"]), flat(x["rp"]),
+        flat(np.broadcast_to(field_max[:, None], (d_, v_))),
+        flat(np.broadcast_to(v[None, :], (d_, v_))),
+        flat(np.broadcast_to(floors[:, None], (d_, v_))),
+        flat(np.broadcast_to(grid.fail_floor[:, None], (d_, v_))),
+    ]
+    return inputs, lat
+
+
 def find_min_latency_batch(grid: DimmGrid, v_grid, *, step: float = 2.5,
                            max_latency: float = 20.0, temp_c: float = 20.0,
                            mesh=None, impl: str = "auto",
@@ -409,7 +448,6 @@ def find_min_latency_batch(grid: DimmGrid, v_grid, *, step: float = 2.5,
     ``"direct"`` keeps the exact-shape call as the parity reference.
     """
     v = np.atleast_1d(np.asarray(v_grid, np.float64))
-    lat = np.arange(10.0, float(max_latency) + 1e-9, float(step))
     if impl == "scalar":
         if grid.dimms is None:
             raise ValueError("impl='scalar' needs a grid built from real "
@@ -428,28 +466,9 @@ def find_min_latency_batch(grid: DimmGrid, v_grid, *, step: float = 2.5,
     if dispatch not in ("auto", "bucketed", "chunked", "direct"):
         raise ValueError(f"unknown dispatch {dispatch!r}")
 
-    req = population.required_latency32(grid, v, float(temp_c))
-    # the scalar path passes the float64 grid latency into
-    # line_error_fraction, so the threshold is float64 of a float32 req —
-    # mirror that promotion exactly
-    x = {op: ((lat[None, None, :] / req[op][:, :, None].astype(np.float64)
-               - 1.0) / grid.cell_sigma[:, None, None])
-         for op in ("rcd", "rp")}
-    floors = np.array([circuit.VENDORS[vd].recovery_floor
-                       for vd in grid.vendors])
-    field_max = grid.susceptibility.reshape(grid.n_dimms, -1).max(axis=1)
-
+    inputs, lat = min_latency_inputs(grid, v, step=step,
+                                     max_latency=max_latency, temp_c=temp_c)
     d_, v_ = grid.n_dimms, v.size
-    flat = lambda a: np.ascontiguousarray(
-        np.broadcast_to(a, (d_, v_) + a.shape[2:]).reshape(
-            (-1,) + a.shape[2:]))
-    inputs = [
-        flat(x["rcd"]), flat(x["rp"]),
-        flat(np.broadcast_to(field_max[:, None], (d_, v_))),
-        flat(np.broadcast_to(v[None, :], (d_, v_))),
-        flat(np.broadcast_to(floors[:, None], (d_, v_))),
-        flat(np.broadcast_to(grid.fail_floor[:, None], (d_, v_))),
-    ]
     mesh = mesh_lib.make_batch_mesh() if mesh is None else mesh
     n_devices = int(mesh.devices.size)
     # float64 end to end (like characterize_batch): the scalar decision is

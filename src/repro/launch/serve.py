@@ -21,23 +21,38 @@ from repro.models import lm
 from repro.parallel import sharding as shard_lib
 
 
-def generate(cfg, params, prompts, gen_len: int, *, frontend=None):
-    """Greedy continuous decode for a fixed batch of prompts."""
+def generate(cfg, params, prompts, gen_len: int, *, frontend=None,
+             timings: dict | None = None):
+    """Greedy continuous decode for a fixed batch of prompts.
+
+    When a ``timings`` dict is passed it is filled with the measured phase
+    wall times — ``prefill_s``, ``decode_s`` and ``decode_steps`` — which
+    ``main`` feeds to the HBM roofline controller in place of canned cost
+    terms."""
     b, s = prompts.shape
     max_len = s + gen_len + 8
+    t0 = time.perf_counter()
     logits, caches = lm.prefill(params, prompts, cfg, max_len=max_len,
                                 frontend_embeds=frontend)
+    logits = jax.block_until_ready(logits)
+    prefill_s = time.perf_counter() - t0
     # donate the KV caches into the jitted step: the new caches alias the
     # old buffers in place of holding two full copies per decoded token
     step = jax.jit(lambda p, c, t: lm.decode_step(p, t, c, cfg),
                    donate_argnums=(1,))
     tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
     out = [tok]
+    t0 = time.perf_counter()
     for _ in range(gen_len - 1):
         logits, caches = step(params, caches, tok)
         tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         out.append(tok)
-    return jnp.concatenate(out, axis=1)
+    toks = jax.block_until_ready(jnp.concatenate(out, axis=1))
+    if timings is not None:
+        timings.update(prefill_s=prefill_s,
+                       decode_s=time.perf_counter() - t0,
+                       decode_steps=gen_len - 1)
+    return toks
 
 
 def main():
@@ -58,10 +73,19 @@ def main():
     prompts = jax.random.randint(jax.random.key(1),
                                  (args.batch, args.prompt_len), 0, cfg.vocab)
     t0 = time.time()
-    toks = generate(cfg, params, prompts, args.gen)
+    timings: dict = {}
+    toks = generate(cfg, params, prompts, args.gen, timings=timings)
     dt = time.time() - t0
-    # decode is memory-bound: the controller picks an aggressive HBM state
-    terms = {"compute_s": 0.1, "memory_s": 1.0, "collective_s": 0.05}
+    # Roofline terms from the measured run, not canned constants: prefill
+    # processes the whole prompt compute-bound, so its per-token time bounds
+    # the compute term at decode batch size; the steady decode step is
+    # bandwidth-bound (weights + KV reread per token), so its wall time
+    # bounds the memory term.  Single host: no collective term.
+    decode_step_s = (timings["decode_s"] / max(1, timings["decode_steps"])
+                     if timings["decode_steps"] else timings["prefill_s"])
+    terms = {"compute_s": timings["prefill_s"] / args.prompt_len,
+             "memory_s": decode_step_s,
+             "collective_s": 0.0}
     pred = hbm_adapter.select_state(terms, target_loss_pct=5.0)
     print(f"[serve] generated {toks.shape} in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s); "
