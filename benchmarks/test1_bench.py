@@ -24,6 +24,9 @@ import numpy as np
 SWEEP = dict(rounds=2, rows=16, row_bytes=1024, seed=0)
 MODULES = ("A1", "B2", "C2", "C4")
 VOLTAGES = (1.30, 1.25, 1.20, 1.15, 1.10)
+# the RowHammer stress grid rides the same flat axis: hammer counts in the
+# pattern-group slot (D x V x H x R, one dispatch, entry "hammer")
+HAMMER_COUNTS = (1e4, 1e5, 1e6)
 
 
 def _measure() -> dict:
@@ -63,6 +66,20 @@ def _measure() -> dict:
         fm_batched_s = min(fm_batched_s, time.time() - t0)
     fm_exact = bool(np.array_equal(fm_scalar, fm_batched, equal_nan=True))
 
+    h = np.asarray(HAMMER_COUNTS)
+    t0 = time.time()
+    h_scalar = test1.run_hammer_batch(grid, v, h, impl="scalar", **SWEEP)
+    h_scalar_s = time.time() - t0
+    test1.run_hammer_batch(grid, v, h, **SWEEP)          # compile
+    h_batched_s = np.inf
+    for _ in range(5):
+        t0 = time.time()
+        h_batched = test1.run_hammer_batch(grid, v, h, **SWEEP)
+        h_batched_s = min(h_batched_s, time.time() - t0)
+    h_exact = all(
+        (getattr(h_batched, f) == getattr(h_scalar, f)).all()
+        for f in ("bit_errors", "erroneous_lines", "error_rows"))
+
     n = grid.n_dimms * v.size * 3 * SWEEP["rounds"]
     return {
         "n_points": n,
@@ -77,6 +94,13 @@ def _measure() -> dict:
         "min_latency_batched_s": fm_batched_s,
         "min_latency_speedup": fm_scalar_s / fm_batched_s,
         "min_latency_exact": fm_exact,
+        "hammer": {
+            "n_points": grid.n_dimms * v.size * h.size * SWEEP["rounds"],
+            "scalar_s": h_scalar_s,
+            "batched_s": h_batched_s,
+            "speedup": h_scalar_s / h_batched_s,
+            "bit_exact": bool(h_exact),
+        },
     }
 
 
@@ -97,6 +121,12 @@ def test1_sweep():
          f"{m['min_latency_scalar_s'] * 1e3:.0f}ms",
          f"speedup={m['min_latency_speedup']:.0f}x "
          f"parity_exact={m['min_latency_exact']}"),
+        ("test1/hammer_sweep/batched",
+         f"{m['hammer']['batched_s'] * 1e3:.1f}ms vs scalar "
+         f"{m['hammer']['scalar_s'] * 1e3:.0f}ms for "
+         f"{m['hammer']['n_points']} (D,V,hammer,round) points",
+         f"speedup={m['hammer']['speedup']:.0f}x "
+         f"bit_exact={m['hammer']['bit_exact']}"),
     ]
 
 # separates compile/steady internally; the harness must not run it twice
@@ -110,7 +140,8 @@ def main() -> None:
         with open(sys.argv[1], "w") as f:
             json.dump(m, f, indent=2)
         print(f"wrote {sys.argv[1]}", file=sys.stderr)
-    if not (m["bit_exact"] and m["min_latency_exact"]):
+    if not (m["bit_exact"] and m["min_latency_exact"]
+            and m["hammer"]["bit_exact"]):
         sys.exit(1)
     if m["speedup"] < 20:
         print(f"WARNING: speedup {m['speedup']:.1f}x below the 20x target",

@@ -12,7 +12,19 @@ export JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS=0
 export JAX_PERSISTENT_CACHE_MIN_ENTRY_SIZE_BYTES=0
 mkdir -p "$JAX_COMPILATION_CACHE_DIR"
 
-python -m pytest -x -q "$@"
+# COVERAGE=1 adds a coverage run over the repro package (requires
+# pytest-cov; CI installs it on the fast split and uploads coverage.xml)
+if [[ "${COVERAGE:-0}" == "1" ]]; then
+    if python -c 'import pytest_cov' 2>/dev/null; then
+        python -m pytest -x -q --cov=repro --cov-report=xml "$@"
+    else
+        echo "COVERAGE=1 set but pytest-cov is not installed; running" \
+             "without coverage" >&2
+        python -m pytest -x -q "$@"
+    fi
+else
+    python -m pytest -x -q "$@"
+fi
 
 # fast smoke: the Voltron-vs-MemDVFS controller figure through the batched
 # engine (run.py exits nonzero if the figure function fails)

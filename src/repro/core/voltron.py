@@ -98,6 +98,38 @@ def _phase_matrix(names, n_intervals: int, interval_cycles: int,
     return np.stack(cols, axis=1)
 
 
+def _lane_phase_seed(name: str, module: str,
+                     phase_seed: int | None) -> int:
+    """Deterministic per-(workload, DIMM) phase seed for the decorrelated
+    fleet scenario.  Depends only on the lane's own (name, module) pair —
+    never on the batch composition — so a decorrelated fleet lane and
+    ``run_suite([w], tables=..., phase_seed=_lane_phase_seed(...))`` draw
+    the identical schedule (the per-lane parity reference)."""
+    base = zlib.crc32(f"{name}|{module}".encode())
+    if phase_seed is None:
+        return base
+    return (int(phase_seed) * 1000003 + base) % (1 << 32)
+
+
+def fleet_phase_matrix(names, modules, n_intervals: int,
+                       interval_cycles: int, phase_seed,
+                       phase_amplitude: float) -> np.ndarray:
+    """[T, W*D] per-*lane* memory-intensity factors (lane ``n = w*D + d``,
+    DIMM axis fastest) for the per-(workload, DIMM) phase-decorrelation
+    scenario: two DIMMs running the same workload no longer see identical
+    phase schedules, so their controllers de-synchronize — the fleet-scale
+    analogue of Fig. 19's interval-length sensitivity."""
+    cols = []
+    phase_len_cycles = 5 * DEFAULT_INTERVAL_CYCLES
+    phase_len = max(1, int(round(phase_len_cycles / interval_cycles)))
+    for name in names:
+        for module in modules:
+            seed = _lane_phase_seed(name, module, phase_seed)
+            cols.append(_phase_factors(n_intervals, seed, phase_len,
+                                       phase_amplitude))
+    return np.stack(cols, axis=1)
+
+
 def _candidate_grid(bank_locality: bool):
     """Resolved timings for the 9 candidates + the 1.35 V fallback, plus
     the (unblended) Algorithm-1 latency features of the candidates."""
@@ -277,6 +309,7 @@ def run_fleet(wls, grid=None, target_loss_pct: float = DEFAULT_TARGET_PCT,
               tables=None,
               phase_seed: int | None = None,
               phase_amplitude: float = 0.15,
+              decorrelate_phases: bool = False,
               max_latency: float = 20.0, temp_c: float = 20.0,
               dispatch: str = "auto"):
     """Voltron across a fleet: every workload on every DIMM's safe table.
@@ -286,6 +319,12 @@ def run_fleet(wls, grid=None, target_loss_pct: float = DEFAULT_TARGET_PCT,
     (:func:`repro.engine.fleet.run_fleet_batched`).  Returns a
     :class:`repro.engine.fleet.FleetBatchResult` with [W, D] arrays of the
     Fig. 14/17 quantities and per-vendor distribution helpers.
+
+    ``decorrelate_phases`` switches from one shared [T, W] phase schedule
+    per workload (every DIMM sees the same intensity trace) to a per-lane
+    [T, W*D] schedule seeded by :func:`_lane_phase_seed` — each
+    (workload, DIMM) pair draws its own phases, modelling independent
+    machines rather than lock-stepped replicas.
     """
     from repro import engine
     from repro.engine import fleet
@@ -298,8 +337,13 @@ def run_fleet(wls, grid=None, target_loss_pct: float = DEFAULT_TARGET_PCT,
                          "build and conflict with an explicit tables=; "
                          "pass them to fleet_tables instead")
     wb = engine.WorkloadBatch.from_workloads(wls)
-    phases = _phase_matrix(wb.names, n_intervals, interval_cycles,
-                           phase_seed, phase_amplitude)
+    if decorrelate_phases:
+        phases = fleet_phase_matrix(wb.names, tables.modules, n_intervals,
+                                    interval_cycles, phase_seed,
+                                    phase_amplitude)
+    else:
+        phases = _phase_matrix(wb.names, n_intervals, interval_cycles,
+                               phase_seed, phase_amplitude)
     return fleet.run_fleet_batched(wb, tables, phases, model.coef_low,
                                    model.coef_high, target_loss_pct,
                                    dispatch=dispatch)

@@ -9,6 +9,11 @@ concrete bit flips in simulated DIMM contents:
   voltage-error model (dispatches to the ``voltage_inject`` kernel).
 - :func:`secded_outcomes` — what SECDED ECC would do to the observed beat
   error densities (Section 4.4 conclusion: SECDED is unlikely to help).
+- :func:`hammer_threshold` / :func:`inject_hammer_errors` — the RowHammer
+  disturbance model under reduced wordline voltage (arxiv 2206.09999):
+  per-cell first-flip hammer-count thresholds that drop with the wordline
+  voltage, blast-radius-1 victims corrupted through the same
+  ``voltage_inject`` dispatch plane.
 """
 from __future__ import annotations
 
@@ -85,6 +90,116 @@ def inject_row_errors(dimm: chips.DIMM, data_u32: jax.Array, bank: int,
     # a corrupted line concentrates its flips: boost word prob by the beat
     # density factor (~55% of beats in a failing line are affected)
     p_word = np.clip(p_word * 0.55 * words_per_line / 2, 0.0, 1.0)
+    if key is None:
+        key = jax.random.key(dimm.index)
+    k1, k2 = jax.random.split(key)
+    rand_word = jax.random.bits(k1, (rows, words), dtype=jnp.uint32)
+    rand_planes = jax.random.bits(k2, (nplanes, rows, words), dtype=jnp.uint32)
+    return inject_ops.inject(data_u32, jnp.asarray(p_word, jnp.float32),
+                             rand_word, rand_planes, impl=impl)
+
+
+# --------------------------------------------------------------------------
+# RowHammer disturbance model (arxiv 2206.09999)
+# --------------------------------------------------------------------------
+# Median-cell first-flip hammer count at the nominal wordline voltage.  The
+# absolute value is model units (the simulated geometry is reduced); what
+# the reproduction preserves is the *shape*: thresholds fall exponentially
+# as the wordline voltage drops and as cell susceptibility rises.
+HAMMER_HC0 = 200_000.0
+# Decades of threshold lost per DEFICIT_RANGE_V of wordline-voltage drop
+# below nominal (monotone: lower voltage -> lower threshold).
+HAMMER_V_SENS = 0.5
+# Decades of threshold lost per susceptibility z-unit (the same spatial
+# field that drives the voltage-error clustering drives disturbance).
+HAMMER_FIELD_SENS = 0.3
+# log10 width of the flip-probability onset above the threshold.
+HAMMER_SIGMA = 0.15
+# Victim-refresh window the fleet assumes (a TRR-style mitigation refreshes
+# potential victims this often); the per-candidate exposure is the number
+# of aggressor activations that fit in it at the candidate's timings.
+HAMMER_WINDOW_MS = 0.25
+
+
+def hammer_threshold(field, v) -> np.ndarray:
+    """Per-cell first-flip hammer count at wordline voltage ``v``.
+
+    ``HC0 * 10**(V_SENS * (v - V_nominal) / DEFICIT_RANGE_V
+    - FIELD_SENS * field)`` — float64, broadcasting over ``field`` (the
+    susceptibility z-field, or its per-DIMM max for the worst cell) and
+    ``v``.  Monotone: non-decreasing in ``v``, non-increasing in ``field``,
+    so the worst (lowest-threshold) cell of a DIMM is its ``field.max()``.
+    """
+    field = np.asarray(field, np.float64)
+    v = np.asarray(v, np.float64)
+    exponent = (HAMMER_V_SENS * (v - hw.VDD_NOMINAL) / chips.DEFICIT_RANGE_V
+                - HAMMER_FIELD_SENS * field)
+    return HAMMER_HC0 * np.power(10.0, exponent)
+
+
+def hammer_flip_probs(field, v, hammer_count) -> np.ndarray:
+    """P(victim cache line flips) after ``hammer_count`` aggressor
+    activations — float64, broadcasting like :func:`hammer_threshold`.
+
+    The log-excess over the per-cell threshold passes through the same
+    truncated normal as the voltage-error model, so the probability is
+    *exactly* 0 at or below the threshold (the threshold is a true
+    first-flip count) and exactly 1 far above it.  Monotone non-decreasing
+    in ``hammer_count`` and non-increasing in ``v``.
+    """
+    th = hammer_threshold(field, v)
+    h = np.maximum(np.asarray(hammer_count, np.float64), 1.0)
+    x = (np.log10(h) - np.log10(th)) / HAMMER_SIGMA - chips.CELL_XMAX
+    return chips._trunc_phi(x)
+
+
+def hammer_word_probs(field, v, hammer_count, rows: int) -> np.ndarray:
+    """float32 per-row word corruption probabilities ``[..., rows]`` for a
+    hammer round on a reduced-geometry bank.
+
+    Even rows are the aggressors (they are *driven*, not disturbed —
+    probability exactly 0); odd rows are the blast-radius-1 victims, each
+    adjacent to two aggressors (double-sided hammering).  Victim rows map
+    onto the susceptibility row-groups proportionally and take the same
+    line-to-word concentration mapping as ``inject_row_errors``.  Both the
+    scalar reference and the batched engine call this one function
+    (elementwise float64 -> float32), so their tables are bit-identical.
+    """
+    p_line = hammer_flip_probs(field, v, hammer_count)   # [..., groups]
+    groups = p_line.shape[-1]
+    idx = (np.arange(rows) * groups) // rows
+    p_line = p_line[..., idx]                            # [..., rows]
+    words_per_line = hw.CACHE_LINE_BYTES // 4
+    p_word = 1.0 - (1.0 - p_line) ** (1.0 / words_per_line)
+    p_word = np.clip(p_word * 0.55 * words_per_line / 2, 0.0, 1.0)
+    p_word = np.where(np.arange(rows) % 2 == 0, 0.0, p_word)
+    return p_word.astype(np.float32)
+
+
+def hammer_exposure(t_ras, t_rp,
+                    window_ms: float = HAMMER_WINDOW_MS) -> np.ndarray:
+    """Aggressor activations deliverable inside one victim-refresh window
+    at the given timings (tRC = tRAS + tRP per activate/precharge cycle).
+    A candidate voltage is hammer-safe iff the worst cell's
+    :func:`hammer_threshold` exceeds this exposure."""
+    return window_ms * 1e6 / (np.asarray(t_ras, np.float64)
+                              + np.asarray(t_rp, np.float64))
+
+
+def inject_hammer_errors(dimm: chips.DIMM, data_u32: jax.Array, bank: int,
+                         v: float, hammer_count: float,
+                         key: jax.Array | None = None, nplanes: int = 2,
+                         impl: str = "auto") -> jax.Array:
+    """Corrupt a [rows, words] uint32 plane with disturbance errors for one
+    bank after ``hammer_count`` activations of every aggressor row.
+
+    Same plumbing as :func:`inject_row_errors` — per-row probabilities into
+    one ``voltage_inject`` dispatch with the identical ``k1``/``k2`` key
+    split — so the batched engine reproduces it bit-exactly from the same
+    key chain."""
+    rows, words = data_u32.shape
+    p_word = hammer_word_probs(dimm.susceptibility[bank], v, hammer_count,
+                               rows)
     if key is None:
         key = jax.random.key(dimm.index)
     k1, k2 = jax.random.split(key)

@@ -106,6 +106,87 @@ def voltage_sweep(dimm: chips.DIMM, voltages, t_rcd: float = 10.0,
     return out
 
 
+@dataclasses.dataclass(frozen=True)
+class HammerResult:
+    """One RowHammer round: every aggressor (even) row activated
+    ``hammer_count`` times, victim (odd) rows read back."""
+
+    dimm: str
+    voltage: float
+    hammer_count: float
+    pattern: str
+    bit_errors: int                 # victim bit flips (aggressors never flip)
+    total_bits: int
+    erroneous_lines: int
+    total_lines: int
+    error_rows: np.ndarray          # [banks, rows] bool; even rows all False
+
+    @property
+    def ber(self) -> float:
+        return self.bit_errors / self.total_bits
+
+    @property
+    def line_error_fraction(self) -> float:
+        return self.erroneous_lines / self.total_lines
+
+
+def run_hammer(dimm: chips.DIMM, voltage: float, hammer_count: float,
+               pattern_group=("0xaa", "0x55"), *, banks: int = 8,
+               rows: int = 64, row_bytes: int = 4096, seed: int = 0,
+               nplanes: int = 2, impl: str = "auto") -> HammerResult:
+    """One RowHammer stress round on a reduced-geometry simulated DIMM.
+
+    Layout mirrors Test 1: even rows hold the data pattern and act as the
+    aggressors (toggled ``hammer_count`` times), odd rows hold the inverse
+    and are the blast-radius-1 victims — every victim sits between two
+    aggressors (double-sided hammering).  The key chain is byte-identical
+    to :func:`run` (base key ``seed * 1000003 + dimm.index``, one
+    sequential split per bank), which is what lets the batched engine
+    (``repro.engine.test1.run_hammer_batch``) reproduce the injected bits
+    exactly.
+    """
+    words = row_bytes // 4
+    pat, pat_inv = (DATA_PATTERNS[p] for p in pattern_group)
+    key = jax.random.key(seed * 1000003 + dimm.index)
+
+    bit_errors = 0
+    bad_lines = 0
+    err_rows = np.zeros((banks, rows), dtype=bool)
+    words_per_line = 16
+    for bank in range(banks):
+        vals = np.where(np.arange(rows)[:, None] % 2 == 0, pat, pat_inv)
+        data = jnp.asarray(np.broadcast_to(vals, (rows, words)).copy(),
+                           dtype=jnp.uint32)
+        key, sub = jax.random.split(key)
+        got = errors.inject_hammer_errors(dimm, data, bank, voltage,
+                                          hammer_count, key=sub,
+                                          nplanes=nplanes, impl=impl)
+        diff = np.asarray(got ^ data)
+        flips = _popcount32(diff)
+        bit_errors += int(flips.sum())
+        line_bad = flips.reshape(rows, -1, words_per_line).sum(-1) > 0
+        bad_lines += int(line_bad.sum())
+        err_rows[bank] = flips.sum(axis=1) > 0
+    total_bits = banks * rows * words * 32
+    total_lines = banks * rows * (words // words_per_line)
+    return HammerResult(dimm.module, voltage, float(hammer_count),
+                        "/".join(pattern_group), bit_errors, total_bits,
+                        bad_lines, total_lines, err_rows)
+
+
+def hammer_sweep(dimm: chips.DIMM, voltages, hammer_counts,
+                 rounds: int = 1, *, seed: int = 0, **kw):
+    """RowHammer stress across a (voltage, hammer-count) grid; round ``r``
+    runs with ``seed + r`` like :func:`voltage_sweep`."""
+    out = []
+    for v in voltages:
+        for h in hammer_counts:
+            for r in range(rounds):
+                out.append(run_hammer(dimm, float(v), float(h),
+                                      seed=seed + r, **kw))
+    return out
+
+
 def find_min_latency(dimm: chips.DIMM, voltage: float, *, step: float = 2.5,
                      max_latency: float = 20.0, temp_c: float = 20.0):
     """The Section 4.2 experiment: smallest (tRCD, tRP) on the platform's

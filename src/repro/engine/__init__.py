@@ -25,16 +25,36 @@ Batching axes
   axis, the [P, 2] pattern words stay replicated, and the bit injection is
   a single ``voltage_inject`` dispatch over the flattened
   [N * banks * rows, words] plane).
+- **D x V x H x R** — the RowHammer stress sweep (``test1.run_hammer_batch``:
+  DIMMs x wordline voltages x hammer counts x rounds on the same flat
+  Test-1 axis, stats entry ``"hammer"``).  Even rows are the aggressors
+  (toggled ``hammer_count`` times, flip probability exactly zero), odd
+  rows the blast-radius-1 victims; the aggressor/victim structure lives
+  entirely in the per-lane word-corruption table
+  (``dram.errors.hammer_word_probs``, voltage-dependent threshold
+  ``hammer_threshold``), so the injection reuses the Test-1 kernel and
+  ``voltage_inject`` dispatch plane unchanged, and the per-element PRNG
+  key data reproduces ``dram.test1.run_hammer``'s scalar split chain
+  bit-exactly.
 - **W x D** — the Voltron fleet (``fleet.run_fleet_batched``: workloads x
   characterized DIMMs, flattened with the DIMM axis fastest — lane
   ``n = w * D + d``).  Workload features and the [T, W] phase schedule are
-  repeated per DIMM; each lane carries its DIMM's [K] safe candidate
-  timing table, latency features and candidate-exclusion mask
-  (``fleet.FleetTables``, derived from ``test1.find_min_latency_batch`` —
-  NaN minimum latency = candidate excluded), and the whole cross-product
-  runs as one dispatched interval scan (``controller.run_flat``, stats
-  entry ``"fleet"``).  The [K] candidate-voltage vector and the Eq. 1
-  coefficients stay replicated.
+  repeated per DIMM — or, under per-(workload, DIMM) phase decorrelation
+  (``voltron.fleet_phase_matrix`` / ``run_fleet(decorrelate_phases=)`` /
+  ``FleetRequest.decorrelate_phases``), a [T, W*D] schedule supplies one
+  independently-seeded column per lane (seed
+  ``voltron._lane_phase_seed(name, module, phase_seed)``, so any lane can
+  be replayed solo via ``run_suite(..., tables=, phase_seed=)``).  Each
+  lane carries its DIMM's [K] safe candidate timing table, latency
+  features and candidate-exclusion mask (``fleet.FleetTables``, derived
+  from ``test1.find_min_latency_batch`` — NaN minimum latency = candidate
+  excluded; the table also carries a per-candidate [D, K]
+  ``hammer_margin`` = disturbance threshold over refresh-window
+  activations, and candidates with margin < 1 are excluded with the same
+  NaN semantics), and the whole cross-product runs as one dispatched
+  interval scan (``controller.run_flat``, stats entry ``"fleet"``).  The
+  [K] candidate-voltage vector and the Eq. 1 coefficients stay
+  replicated.
 
 The flat batch-axis convention
 ==============================
@@ -131,7 +151,9 @@ and ``core.voltron.run_controller`` is ``run_suite`` with one workload.
 The characterization path keeps its reference as
 ``characterize_batch(..., impl="scalar")`` — the original per-DIMM
 chips/errors loop — and the Test-1 path as
-``test1.run_batch(..., impl="scalar")`` — a loop over ``dram.test1.run``.
+``test1.run_batch(..., impl="scalar")`` — a loop over ``dram.test1.run``
+(the hammer sweep keeps ``dram.test1.run_hammer`` /
+``test1._run_hammer_scalar`` as its reference the same way).
 Results match the scalar paths to float32 tolerance (system sweep) / 1e-6
 (characterization, float64 end to end) / bit-exactly (Test-1 error counts,
 same PRNG keys); shapes and dataclass fields are unchanged.
@@ -154,4 +176,5 @@ from repro.engine.service import (AdmissionError,  # noqa: F401
                                   TableUnavailableError)
 from repro.engine.solve import (BatchResult, ComparisonBatch,  # noqa: F401
                                 evaluate_batch, simulate_batch)
-from repro.engine.test1 import Test1Batch  # noqa: F401
+from repro.engine.test1 import (HammerBatch, Test1Batch,  # noqa: F401
+                                run_hammer_batch)

@@ -223,7 +223,12 @@ def run_flat(entry: str, feats: dict, phases, coef_lo, coef_hi,
     """Run the interval scan over N flat lanes with per-element tables.
 
     ``feats``: dict of [N, C]/[N] workload features (``_wb_feats`` order);
-    ``phases``: [T, N]; ``cand_t``: dict of [N, K] candidate timings;
+    ``phases``: [T, N] — one column *per lane*, so callers control phase
+    correlation across lanes: the plain fleet repeats each workload's
+    schedule over its D lanes, while the phase-decorrelation scenario
+    (``voltron.fleet_phase_matrix`` / ``run_fleet(decorrelate_phases=)``)
+    passes a distinct per-(workload, DIMM) column for every lane;
+    ``cand_t``: dict of [N, K] candidate timings;
     ``lat_feat``: [N, K-1]; ``cand_valid``: [N, K] bool.  ``entry`` names
     the dispatch-stats bucket ("controller_scan" for the plain suite,
     "fleet" for the W x D cross-product).  Returns the raw output dict

@@ -17,7 +17,13 @@ fleet deployment must hand each DIMM its own table:
   into Algorithm 1 so the controller can never select a voltage the DIMM
   cannot run error-free.  tRAS keeps the circuit-model value per candidate
   (Test 1 overlaps tRAS with the column reads — footnote 8 — so the
-  characterization does not retime it).
+  characterization does not retime it).  On top of the error-free floor
+  rides the *disturbance* floor (arxiv 2206.09999): a candidate whose
+  worst-cell hammer threshold (``errors.hammer_threshold`` — voltage
+  shifts first-flip hammer counts) undercuts the refresh-window exposure
+  at the candidate's own timings is excluded with the same NaN semantics,
+  and the per-candidate hammer margin (threshold / exposure) is carried
+  as a table row and surfaced per-vendor in :class:`FleetBatchResult`.
 
 - :func:`run_fleet_batched` runs the interval controller over the
   flattened W x D cross-product (lane ``n = w * D + d``) as one dispatched
@@ -39,7 +45,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.dram import circuit
+from repro.dram import circuit, errors
 from repro.engine import controller
 from repro.engine import solve as engine_solve
 from repro.engine import test1 as engine_test1
@@ -57,8 +63,11 @@ class FleetTables:
     vendors: tuple
     cand_v: np.ndarray      # [K] candidate voltages
     timings: np.ndarray     # [D, K, 3] (tRCD, tRP, tRAS); NaN where invalid
-    valid: np.ndarray       # [D, K] candidate has an error-free latency pair
+    valid: np.ndarray       # [D, K] error-free latency pair AND hammer-safe
     lat_feat: np.ndarray    # [D, K-1] Algorithm-1 latency feature (tRP+tRAS)
+    hammer_margin: np.ndarray   # [D, K] worst-cell threshold / exposure;
+    #                             NaN where min-latency already excluded
+    hammer_window_ms: float = errors.HAMMER_WINDOW_MS
 
     @property
     def n_dimms(self) -> int:
@@ -77,12 +86,15 @@ class FleetTables:
             tuple(self.modules[i] for i in idx),
             tuple(self.vendors[i] for i in idx),
             self.cand_v, self.timings[idx], self.valid[idx],
-            self.lat_feat[idx])
+            self.lat_feat[idx], self.hammer_margin[idx],
+            self.hammer_window_ms)
 
 
 def build_tables(grid: DimmGrid, cand_v, *, step: float = 2.5,
                  max_latency: float = 20.0, temp_c: float = 20.0,
-                 mesh=None, dispatch: str = "auto") -> FleetTables:
+                 mesh=None, dispatch: str = "auto",
+                 hammer_window_ms: float = errors.HAMMER_WINDOW_MS,
+                 hammer_scale=None) -> FleetTables:
     """Derive every DIMM's safe candidate table in one batched call.
 
     ``cand_v`` must be ascending with the nominal fallback last.  For each
@@ -92,6 +104,18 @@ def build_tables(grid: DimmGrid, cand_v, *, step: float = 2.5,
     is exactly where the controller's exclusion mask goes.  Raising
     ``max_latency`` can only keep or extend each DIMM's valid set, so the
     per-DIMM safe floor (``safe_vmin``) is non-increasing in it.
+
+    A surviving candidate is then screened against the disturbance floor:
+    its worst-cell hammer threshold (``errors.hammer_threshold`` at the
+    candidate voltage — non-decreasing in voltage) must exceed the
+    refresh-window exposure (``errors.hammer_exposure`` over
+    ``hammer_window_ms`` at the candidate's own table timings).  A
+    candidate whose margin (threshold / exposure) drops below 1 is
+    excluded with the same NaN semantics as the min-latency floor; the
+    margin itself rides along as a ``FleetTables`` row (NaN where
+    min-latency already excluded).  ``hammer_scale`` — an optional
+    ``{module: factor}`` threshold multiplier — is the failure-injection
+    knob for degraded parts (tests skew one DIMM below the window).
     """
     cand_v = np.atleast_1d(np.asarray(cand_v, np.float64))
     if cand_v.size < 2 or not (np.diff(cand_v) > 0).all():
@@ -101,19 +125,35 @@ def build_tables(grid: DimmGrid, cand_v, *, step: float = 2.5,
         grid, cand_v, step=step, max_latency=max_latency, temp_c=temp_c,
         mesh=mesh, dispatch=dispatch)                     # [D, K, 2]
     valid = np.isfinite(minlat).all(axis=-1)              # [D, K]
-    if not valid[:, -1].all():
-        bad = [m for m, ok in zip(grid.modules, valid[:, -1]) if not ok]
-        raise ValueError(
-            f"fallback candidate {cand_v[-1]} V has no error-free latency "
-            f"<= {max_latency} ns for {bad}; the controller needs a valid "
-            "fallback on every DIMM")
     t_ras = circuit.timings_for_voltages(cand_v)[:, 2]    # [K]
     timings = np.concatenate(
         [minlat, np.broadcast_to(t_ras, valid.shape)[..., None]], axis=-1)
     timings = np.where(valid[..., None], timings, np.nan)
+
+    # disturbance floor: worst-cell threshold vs refresh-window exposure
+    field_max = grid.susceptibility.reshape(grid.n_dimms, -1).max(axis=1)
+    threshold = errors.hammer_threshold(field_max[:, None],
+                                        cand_v[None, :])  # [D, K]
+    if hammer_scale is not None:
+        scale = np.array([float(hammer_scale.get(m, 1.0))
+                          for m in grid.modules], np.float64)
+        threshold = threshold * scale[:, None]
+    with np.errstate(invalid="ignore"):
+        exposure = errors.hammer_exposure(timings[..., 2], timings[..., 1],
+                                          hammer_window_ms)
+        hammer_margin = threshold / exposure              # NaN where invalid
+        valid = valid & (hammer_margin >= 1.0)            # NaN compares False
+    if not valid[:, -1].all():
+        bad = [m for m, ok in zip(grid.modules, valid[:, -1]) if not ok]
+        raise ValueError(
+            f"fallback candidate {cand_v[-1]} V is unsafe (no error-free "
+            f"latency <= {max_latency} ns, or hammer threshold under the "
+            f"{hammer_window_ms} ms refresh window) for {bad}; the "
+            "controller needs a valid fallback on every DIMM")
+    timings = np.where(valid[..., None], timings, np.nan)
     lat_feat = timings[:, :-1, 1] + timings[:, :-1, 2]    # [D, K-1]
     return FleetTables(grid.modules, grid.vendors, cand_v, timings, valid,
-                       lat_feat)
+                       lat_feat, hammer_margin, float(hammer_window_ms))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,6 +171,7 @@ class FleetBatchResult:
     dram_energy_savings_pct: np.ndarray
     system_energy_savings_pct: np.ndarray
     perf_per_watt_gain_pct: np.ndarray
+    hammer_margin: np.ndarray | None = None   # [D, K] per-candidate margin
 
     @property
     def n_workloads(self) -> int:
@@ -153,6 +194,25 @@ class FleetBatchResult:
                            "p50": float(np.median(x)), "max": float(x.max())}
         return out
 
+    def vendor_hammer_margin(self) -> dict:
+        """Per-vendor distribution of the per-candidate disturbance margin
+        (worst-cell hammer threshold / refresh-window exposure) over every
+        finite (DIMM, candidate) entry — the arxiv 2204.10378
+        transparent-reliability report next to the energy quantities.
+        Margins < 1 mark candidates the tables excluded as hammer-unsafe.
+        """
+        if self.hammer_margin is None:
+            raise ValueError("this result was built without hammer margins "
+                             "(tables predate the disturbance floor)")
+        out = {}
+        for vendor in sorted(set(self.vendors)):
+            rows = [i for i, vd in enumerate(self.vendors) if vd == vendor]
+            x = self.hammer_margin[rows].reshape(-1)
+            x = x[np.isfinite(x)]
+            out[vendor] = {"mean": float(x.mean()), "min": float(x.min()),
+                           "p50": float(np.median(x)), "max": float(x.max())}
+        return out
+
 
 def run_fleet_batched(wb: WorkloadBatch, tables: FleetTables,
                       phases: np.ndarray, coef_lo, coef_hi,
@@ -170,6 +230,13 @@ def run_fleet_batched(wb: WorkloadBatch, tables: FleetTables,
     to ``n_devices * 2**k``, sharded over the ``("batch",)`` mesh, chunked
     past the resident budget).  ``dispatch="direct"`` keeps the exact-shape
     jit call as the parity reference.
+
+    ``phases`` may also be [T, W*D] — one column per *lane* in the
+    ``n = w * D + d`` order — for the phase-decorrelation scenario where
+    every (workload, DIMM) pair sees its own schedule
+    (``voltron.fleet_phase_matrix`` builds it; ``run_suite(...,
+    phase_seed=voltron._lane_phase_seed(name, module, seed))`` stays the
+    per-lane parity reference).
     """
     w, d = wb.n_workloads, tables.n_dimms
     feats = {key: np.asarray(a)
@@ -177,7 +244,14 @@ def run_fleet_batched(wb: WorkloadBatch, tables: FleetTables,
     rep_w = lambda a: np.repeat(a, d, axis=0)          # [W,...] -> [W*D,...]
     tile_d = lambda a: np.tile(a, (w,) + (1,) * (a.ndim - 1))
     flat_feats = {key: rep_w(a) for key, a in feats.items()}
-    phases_flat = np.repeat(np.asarray(phases), d, axis=1)      # [T, W*D]
+    phases = np.asarray(phases)
+    if phases.shape[1] == w * d:                       # per-lane columns
+        phases_flat = phases
+    elif phases.shape[1] == w:                         # per-workload columns
+        phases_flat = np.repeat(phases, d, axis=1)     # [T, W*D]
+    else:
+        raise ValueError(f"phases must be [T, {w}] (per workload) or "
+                         f"[T, {w * d}] (per lane); got {phases.shape}")
     cand_t = {"t_rcd": tile_d(tables.timings[:, :, 0]),
               "t_rp": tile_d(tables.timings[:, :, 1]),
               "t_ras": tile_d(tables.timings[:, :, 2])}
@@ -195,4 +269,5 @@ def run_fleet_batched(wb: WorkloadBatch, tables: FleetTables,
         shape2(out["dram_power_savings_pct"]),
         shape2(out["dram_energy_savings_pct"]),
         shape2(out["system_energy_savings_pct"]),
-        shape2(out["perf_per_watt_gain_pct"]))
+        shape2(out["perf_per_watt_gain_pct"]),
+        np.asarray(tables.hammer_margin))

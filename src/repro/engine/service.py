@@ -143,6 +143,10 @@ class FleetRequest:
     interval_cycles: int | None = None
     phase_seed: int | None = None
     phase_amplitude: float = 0.15
+    # Per-(workload, DIMM) phase decorrelation: each lane draws its own
+    # schedule via voltron.fleet_phase_matrix instead of every DIMM
+    # repeating the workload's shared column.
+    decorrelate_phases: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -206,9 +210,10 @@ class _Group:
 @dataclasses.dataclass(frozen=True)
 class _TableRow:
     vendor: str
-    timings: np.ndarray     # [K, 3]
-    valid: np.ndarray       # [K]
-    lat_feat: np.ndarray    # [K-1]
+    timings: np.ndarray        # [K, 3]
+    valid: np.ndarray          # [K]
+    lat_feat: np.ndarray       # [K-1]
+    hammer_margin: np.ndarray  # [K]; NaN where min-latency excluded
 
 
 # --------------------------------------------------------------------------
@@ -266,7 +271,7 @@ class EngineService:
         for i, module in enumerate(tables.modules):
             self._tables[module] = _TableRow(
                 tables.vendors[i], tables.timings[i], tables.valid[i],
-                tables.lat_feat[i])
+                tables.lat_feat[i], tables.hammer_margin[i])
 
     def drop_table(self, module: str) -> None:
         """Drop one DIMM's table mid-stream (failure injection): queued
@@ -591,10 +596,16 @@ class EngineService:
         wb = WorkloadBatch.from_workloads(pairs)
         cycles = (voltron.DEFAULT_INTERVAL_CYCLES
                   if req.interval_cycles is None else req.interval_cycles)
-        # per-workload columns are name-seeded, so the schedule is
-        # independent of which workloads share the request/megabatch
-        phases = voltron._phase_matrix(wb.names, req.n_intervals, cycles,
-                                       req.phase_seed, req.phase_amplitude)
+        # per-workload (or, decorrelated, per-lane) columns are name-seeded,
+        # so the schedule is independent of which workloads share the
+        # request/megabatch
+        if req.decorrelate_phases:
+            phases = voltron.fleet_phase_matrix(
+                wb.names, req.modules, req.n_intervals, cycles,
+                req.phase_seed, req.phase_amplitude)          # [T, W*D]
+        else:
+            phases = voltron._phase_matrix(wb.names, req.n_intervals, cycles,
+                                           req.phase_seed, req.phase_amplitude)
         impl = ("pallas" if jax.default_backend() == "tpu" else "reference")
         cand_v = self._cand_v
         cand_bytes = cand_v.tobytes()
@@ -630,7 +641,8 @@ class EngineService:
             rep_w = lambda a: np.repeat(a, d, axis=0)
             tile_d = lambda a: np.tile(a, (w,) + (1,) * (a.ndim - 1))
             flat_feats = {k: rep_w(a) for k, a in feats.items()}
-            phases_flat = np.repeat(phases, d, axis=1)          # [T, W*D]
+            phases_flat = (phases if phases.shape[1] == w * d
+                           else np.repeat(phases, d, axis=1))   # [T, W*D]
             timings = np.stack([r.timings for r in rows])       # [D, K, 3]
             cand_t = {"t_rcd": tile_d(timings[:, :, 0]),
                       "t_rp": tile_d(timings[:, :, 1]),
@@ -650,6 +662,11 @@ class EngineService:
             shape2 = lambda a: a.reshape(w, d)
             vendors = tuple(self._tables[m].vendor if m in self._tables
                             else "?" for m in req.modules)
+            k = cand_v.size
+            margin = np.stack([
+                np.asarray(self._tables[m].hammer_margin, np.float64)
+                if m in self._tables else np.full(k, np.nan)
+                for m in req.modules])                          # [D, K]
             return fleet_lib.FleetBatchResult(
                 wb.names, tuple(req.modules), vendors, cand_v,
                 selected.reshape(w, d, -1),
@@ -657,6 +674,7 @@ class EngineService:
                 shape2(out["dram_power_savings_pct"]),
                 shape2(out["dram_energy_savings_pct"]),
                 shape2(out["system_energy_savings_pct"]),
-                shape2(out["perf_per_watt_gain_pct"]))
+                shape2(out["perf_per_watt_gain_pct"]),
+                margin)
 
         return _Lowered(key, spec, w * d, resolve, post)

@@ -52,7 +52,7 @@ import numpy as np
 from jax.experimental import enable_x64
 
 from repro import hw
-from repro.dram import chips, circuit
+from repro.dram import chips, circuit, errors
 from repro.dram import test1 as scalar_test1
 from repro.engine import dispatch as dispatch_lib
 from repro.engine import population
@@ -203,6 +203,46 @@ _test1_flat = jax.jit(_test1_flat_fn,
                                        "inject_impl"))
 
 
+def _dispatch_test1_plane(entry, inputs, patterns, statics, mesh,
+                          dispatch_mode, max_elements_resident):
+    """Run ``_test1_flat_fn`` over a flattened stress batch — shared by the
+    Test-1 pattern sweep (entry ``"test1"``) and the hammer sweep (entry
+    ``"hammer"``): one ``voltage_inject`` dispatch per call, bucketed /
+    chunked through the dispatch layer, or the exact-shape jit for
+    ``dispatch="direct"`` (the bit-exact parity reference)."""
+    mesh = mesh_lib.make_batch_mesh() if mesh is None else mesh
+    n_devices = int(mesh.devices.size)
+    if dispatch_mode == "direct":
+        inputs, n_pad = population._pad_flat(inputs, n_devices)
+        args = [jnp.asarray(a) for a in inputs]
+        valid = jnp.ones((args[0].shape[0],), bool)
+        pat = jnp.asarray(patterns)
+        if n_devices > 1:
+            args = [jax.device_put(a, mesh_lib.batch_sharding(mesh, a.ndim))
+                    for a in args]
+            valid = jax.device_put(valid, mesh_lib.batch_sharding(mesh, 1))
+            pat = jax.device_put(pat, jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec()))
+        out = _test1_flat(*args, pat, valid, **statics)
+        out = {k: np.asarray(a) for k, a in out.items()}
+        if n_pad:
+            out = {k: a[:-n_pad] for k, a in out.items()}
+        return out
+    # the [banks, rows, words] data/random planes plus popcounts are
+    # the resident footprint each flat element drags through the jit
+    cfg = None if max_elements_resident is None else \
+        dispatch_lib.DispatchConfig(
+            max_elements_resident=int(max_elements_resident))
+    banks, rows, words, nplanes = (statics["banks"], statics["rows"],
+                                   statics["words"], statics["nplanes"])
+    out = dispatch_lib.dispatch_flat(
+        entry, functools.partial(_test1_flat_fn, **statics),
+        inputs, (patterns,), statics_key=tuple(sorted(statics.items())),
+        mesh=mesh, element_cost=(nplanes + 4) * banks * rows * words,
+        mode=dispatch_mode, config=cfg)
+    return {k: np.asarray(a) for k, a in out.items()}
+
+
 def _run_batched(grid, v, pattern_groups, rounds, t_rcd, t_rp, banks, rows,
                  row_bytes, temp_c, seed, nplanes, mesh, inject_impl,
                  dispatch_mode: str = "auto",
@@ -226,37 +266,10 @@ def _run_batched(grid, v, pattern_groups, rounds, t_rcd, t_rp, banks, rows,
         flat(np.arange(p_, dtype=np.int32)[None, None, :, None], ()),
     ]
 
-    mesh = mesh_lib.make_batch_mesh() if mesh is None else mesh
-    n_devices = int(mesh.devices.size)
     statics = dict(banks=banks, rows=rows, words=words, nplanes=nplanes,
                    inject_impl=inject_impl)
-    if dispatch_mode == "direct":
-        inputs, n_pad = population._pad_flat(inputs, n_devices)
-        args = [jnp.asarray(a) for a in inputs]
-        valid = jnp.ones((args[0].shape[0],), bool)
-        pat = jnp.asarray(patterns)
-        if n_devices > 1:
-            args = [jax.device_put(a, mesh_lib.batch_sharding(mesh, a.ndim))
-                    for a in args]
-            valid = jax.device_put(valid, mesh_lib.batch_sharding(mesh, 1))
-            pat = jax.device_put(pat, jax.sharding.NamedSharding(
-                mesh, jax.sharding.PartitionSpec()))
-        out = _test1_flat(*args, pat, valid, **statics)
-        out = {k: np.asarray(a) for k, a in out.items()}
-        if n_pad:
-            out = {k: a[:-n_pad] for k, a in out.items()}
-    else:
-        # the [banks, rows, words] data/random planes plus popcounts are
-        # the resident footprint each flat element drags through the jit
-        cfg = None if max_elements_resident is None else \
-            dispatch_lib.DispatchConfig(
-                max_elements_resident=int(max_elements_resident))
-        out = dispatch_lib.dispatch_flat(
-            "test1", functools.partial(_test1_flat_fn, **statics),
-            inputs, (patterns,), statics_key=tuple(sorted(statics.items())),
-            mesh=mesh, element_cost=(nplanes + 4) * banks * rows * words,
-            mode=dispatch_mode, config=cfg)
-        out = {k: np.asarray(a) for k, a in out.items()}
+    out = _dispatch_test1_plane("test1", inputs, patterns, statics, mesh,
+                                dispatch_mode, max_elements_resident)
 
     return Test1Batch(
         grid.modules, v, tuple(tuple(g) for g in pattern_groups), rounds,
@@ -349,6 +362,159 @@ def run_batch(grid: DimmGrid, v_grid,
     return _run_batched(grid, v, pattern_groups, rounds, t_rcd, t_rp, banks,
                         rows, row_bytes, temp_c, seed, nplanes, mesh,
                         inject_impl, dispatch, max_elements_resident)
+
+
+# --------------------------------------------------------------------------
+# Batched RowHammer stress (the hammer pattern-group on the Test-1 axis)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class HammerBatch:
+    """Results of one D x V x hammer-count x round disturbance sweep.
+
+    The hammer-count axis H rides the Test-1 flat axis in the
+    pattern-group slot: the grid flattens to ``N = D * V * H * R`` and runs
+    through the same ``voltage_inject`` dispatch plane as ``run_batch``
+    (entry ``"hammer"``).  Even rows are aggressors (never flip), odd rows
+    the blast-radius-1 victims.
+    """
+
+    modules: tuple
+    v_grid: np.ndarray              # [V]
+    hammer_counts: np.ndarray       # [H]
+    rounds: int
+    pattern: str                    # aggressor/victim (data, ~data) labels
+    banks: int
+    rows: int
+    row_bytes: int
+    bit_errors: np.ndarray          # [D, V, H, R] int64 (victim flips)
+    erroneous_lines: np.ndarray     # [D, V, H, R] int64
+    error_rows: np.ndarray          # [D, V, H, R, banks, rows] bool
+    total_bits: int                 # per grid element
+    total_lines: int                # per grid element
+
+    @property
+    def ber(self) -> np.ndarray:
+        return self.bit_errors / self.total_bits
+
+    @property
+    def line_error_fraction(self) -> np.ndarray:
+        return self.erroneous_lines / self.total_lines
+
+    @property
+    def victim_row_fraction(self) -> np.ndarray:
+        """[D, V, H, R] fraction of victim (odd) rows with >= 1 flip."""
+        victims = self.error_rows[..., 1::2]
+        return victims.mean(axis=(-2, -1))
+
+
+def _hammer_word_probs(grid: DimmGrid, v: np.ndarray, hammer_counts,
+                       rows: int) -> np.ndarray:
+    """float32 [D, V, H, banks, rows] hammer corruption probabilities —
+    :func:`repro.dram.errors.hammer_word_probs` broadcast over the whole
+    (DIMM, voltage, hammer-count) grid.  The scalar reference calls the
+    identical elementwise function, so the tables match bit-for-bit."""
+    h = np.asarray(hammer_counts, np.float64)
+    field = grid.susceptibility[:, None, None]           # [D, 1, 1, B, G]
+    return errors.hammer_word_probs(
+        field, v[None, :, None, None, None],
+        h[None, None, :, None, None], rows)
+
+
+def _run_hammer_scalar(grid, v, h, rounds, pattern_group, banks, rows,
+                       row_bytes, seed, nplanes, inject_impl):
+    shape4 = (grid.n_dimms, v.size, h.size, rounds)
+    bit_errors = np.zeros(shape4, np.int64)
+    bad_lines = np.zeros(shape4, np.int64)
+    err_rows = np.zeros(shape4 + (banks, rows), bool)
+    res = None
+    for di, d in enumerate(grid.dimms):
+        for vi, vv in enumerate(v):
+            for hi, hh in enumerate(h):
+                for ri in range(rounds):
+                    res = scalar_test1.run_hammer(
+                        d, float(vv), float(hh),
+                        pattern_group=tuple(pattern_group), banks=banks,
+                        rows=rows, row_bytes=row_bytes, seed=seed + ri,
+                        nplanes=nplanes, impl=inject_impl)
+                    bit_errors[di, vi, hi, ri] = res.bit_errors
+                    bad_lines[di, vi, hi, ri] = res.erroneous_lines
+                    err_rows[di, vi, hi, ri] = res.error_rows
+    return HammerBatch(
+        grid.modules, v, h, rounds, "/".join(pattern_group), banks, rows,
+        row_bytes, bit_errors, bad_lines, err_rows, res.total_bits,
+        res.total_lines)
+
+
+def run_hammer_batch(grid: DimmGrid, v_grid, hammer_counts, *,
+                     rounds: int = 1, pattern_group=("0xaa", "0x55"),
+                     banks: int = 8, rows: int = 64, row_bytes: int = 4096,
+                     seed: int = 0, nplanes: int = 2, mesh=None,
+                     impl: str = "auto", inject_impl: str | None = None,
+                     dispatch: str = "auto",
+                     max_elements_resident: int | None = None
+                     ) -> HammerBatch:
+    """RowHammer stress on every (DIMM, voltage, hammer count, round) at
+    once — the hammer pattern-group on the Test-1 flat batch axis.
+
+    Aggressor (even) rows hold the data pattern and are toggled
+    ``hammer_counts[h]`` times; victim (odd) rows hold the inverse and are
+    read back through the same flat ``voltage_inject`` dispatch plane as
+    ``run_batch`` — the D x V x H x R grid flattens into one leading batch
+    axis (no Python loop over DIMMs or voltages), the per-element PRNG key
+    data reproduces the scalar split chain of ``dram.test1.run_hammer``
+    bit-exactly, and the per-element probability table encodes the
+    aggressor/victim structure (aggressors at exactly 0).  Dispatch
+    semantics (bucketing, chunking, ``dispatch="direct"`` parity reference)
+    are identical to ``run_batch``; stats land under entry ``"hammer"``.
+    ``impl="scalar"`` loops ``dram.test1.run_hammer`` instead (the parity
+    reference and benchmark baseline).
+    """
+    if grid.dimms is None:
+        raise ValueError("the hammer sweep needs a grid built from real "
+                         "DIMMs (DimmGrid.from_population / from_dimms)")
+    v = np.atleast_1d(np.asarray(v_grid, np.float64))
+    h = np.atleast_1d(np.asarray(hammer_counts, np.float64))
+    if impl == "auto":
+        impl = "batched"
+    if impl == "scalar":
+        return _run_hammer_scalar(grid, v, h, rounds, pattern_group, banks,
+                                  rows, row_bytes, seed, nplanes,
+                                  inject_impl or "auto")
+    if impl != "batched":
+        raise ValueError(f"unknown impl {impl!r}")
+    if dispatch not in ("auto", "bucketed", "chunked", "direct"):
+        raise ValueError(f"unknown dispatch {dispatch!r}")
+    if inject_impl is None:
+        inject_impl = ("pallas" if jax.default_backend() == "tpu"
+                       else "reference")
+
+    words = row_bytes // 4
+    shape4 = (grid.n_dimms, v.size, h.size, rounds)
+    p_word = _hammer_word_probs(grid, v, h, rows)        # [D, V, H, B, rows]
+    kd = _bank_key_data([d.index for d in grid.dimms], rounds, seed, banks)
+    patterns = np.array([[scalar_test1.DATA_PATTERNS[pattern_group[0]],
+                          scalar_test1.DATA_PATTERNS[pattern_group[1]]]],
+                        np.uint32)                       # [1, 2]
+
+    flat = lambda a, trail: np.ascontiguousarray(
+        np.broadcast_to(a, shape4 + trail).reshape((-1,) + trail))
+    inputs = [
+        flat(p_word[:, :, :, None], (banks, rows)),
+        flat(kd[:, None, None], (banks, 2, 2)),
+        flat(np.zeros((1, 1, 1, 1), np.int32), ()),
+    ]
+    statics = dict(banks=banks, rows=rows, words=words, nplanes=nplanes,
+                   inject_impl=inject_impl)
+    out = _dispatch_test1_plane("hammer", inputs, patterns, statics, mesh,
+                                dispatch, max_elements_resident)
+    return HammerBatch(
+        grid.modules, v, h, rounds, "/".join(pattern_group), banks, rows,
+        row_bytes,
+        out["bit_errors"].reshape(shape4).astype(np.int64),
+        out["erroneous_lines"].reshape(shape4).astype(np.int64),
+        out["error_rows"].reshape(shape4 + (banks, rows)),
+        banks * rows * words * 32,
+        banks * rows * (words // WORDS_PER_LINE))
 
 
 # --------------------------------------------------------------------------

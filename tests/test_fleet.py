@@ -106,6 +106,161 @@ class TestFleetTables:
         ci = tables.modules.index("C2")
         np.testing.assert_array_equal(sub.timings[0], tables.timings[ci])
         np.testing.assert_array_equal(sub.valid[0], tables.valid[ci])
+        np.testing.assert_array_equal(sub.hammer_margin[0],
+                                      tables.hammer_margin[ci])
+
+
+class TestHammerExclusion:
+    """The disturbance safety floor in build_tables: candidates whose
+    voltage-dependent hammer threshold undercuts the refresh-window
+    activation count are excluded with the same NaN semantics as the
+    min-latency floor."""
+
+    SKEW_MODULE = "B2"
+
+    @pytest.fixture(scope="class")
+    def skewed(self, grid, tables):
+        """Tables with SKEW_MODULE's hammer threshold pushed just below the
+        refresh window at its lowest previously-valid candidate."""
+        di = tables.modules.index(self.SKEW_MODULE)
+        k_low = np.where(tables.valid[di])[0][0]
+        scale = 0.9 / tables.hammer_margin[di, k_low]
+        return fleet.build_tables(grid, tables.cand_v,
+                                  hammer_scale={self.SKEW_MODULE: scale})
+
+    def test_default_margins_all_safe(self, tables):
+        """The calibrated model leaves every min-latency-valid candidate
+        hammer-safe at defaults — the floor only bites under skew."""
+        assert (tables.hammer_margin[tables.valid] >= 1.0).all()
+        # margin is NaN exactly where the min-latency floor already
+        # excluded the candidate (same-NaN-semantics acceptance)
+        np.testing.assert_array_equal(np.isfinite(tables.hammer_margin),
+                                      tables.valid)
+
+    def test_margin_monotone_in_voltage(self, tables):
+        """Higher wordline voltage -> higher threshold and (weakly) shorter
+        row cycle -> the margin grows along the candidate axis."""
+        for di in range(tables.n_dimms):
+            m = tables.hammer_margin[di][tables.valid[di]]
+            assert (np.diff(m) > 0).all(), tables.modules[di]
+
+    def test_skew_excludes_exactly_that_dimm(self, tables, skewed):
+        di = tables.modules.index(self.SKEW_MODULE)
+        k_low = np.where(tables.valid[di])[0][0]
+        diff = tables.valid != skewed.valid
+        # exactly the skewed DIMM's lowest-valid candidate flips
+        assert np.argwhere(diff).tolist() == [[di, k_low]]
+        assert not skewed.valid[di, k_low]
+        # NaN semantics identical to the min-latency floor: the excluded
+        # candidate's timings go NaN, and the safe floor rises
+        assert np.isnan(skewed.timings[di, k_low]).all()
+        assert skewed.safe_vmin[di] > tables.safe_vmin[di]
+        # the margin itself stays finite (< 1) so reports can show *why*
+        assert np.isfinite(skewed.hammer_margin[di, k_low])
+        assert skewed.hammer_margin[di, k_low] < 1.0
+        # untouched DIMMs keep their margins bit-for-bit
+        keep = [i for i in range(tables.n_dimms) if i != di]
+        np.testing.assert_array_equal(skewed.hammer_margin[keep],
+                                      tables.hammer_margin[keep])
+
+    def test_run_suite_parity_holds_on_skewed_tables(self, skewed, wls,
+                                                     model):
+        """Per-lane parity survives the hammer exclusion: every fleet lane
+        on the skewed tables reproduces a per-DIMM run_suite call."""
+        res = voltron.run_fleet(wls, tables=skewed, n_intervals=4,
+                                model=model)
+        for di, m in enumerate(skewed.modules):
+            suite = voltron.run_suite(wls, n_intervals=4, model=model,
+                                      tables=skewed.select([m]))
+            for wi, r in enumerate(suite):
+                np.testing.assert_array_equal(
+                    res.selected_voltages[wi, di], r.selected_voltages,
+                    err_msg=f"{m}/{r.workload}")
+                for f in METRIC_FIELDS:
+                    np.testing.assert_allclose(
+                        getattr(res, f)[wi, di], getattr(r, f), atol=ATOL,
+                        err_msg=f"{m}/{r.workload}/{f}")
+
+    def test_hammer_unsafe_fallback_raises(self, grid, tables):
+        with pytest.raises(ValueError, match="hammer|refresh window"):
+            fleet.build_tables(grid, tables.cand_v,
+                               hammer_scale={self.SKEW_MODULE: 1e-9})
+
+    def test_margin_reported_per_vendor(self, tables, wls, model):
+        res = voltron.run_fleet(wls, tables=tables, n_intervals=3,
+                                model=model)
+        np.testing.assert_array_equal(res.hammer_margin,
+                                      tables.hammer_margin)
+        dist = res.vendor_hammer_margin()
+        assert set(dist) == set(tables.vendors)
+        for d in dist.values():
+            assert d["min"] <= d["p50"] <= d["max"]
+            assert d["min"] >= 1.0          # defaults are all safe
+
+    def test_wider_window_lowers_margin(self, grid, tables):
+        wide = fleet.build_tables(grid, tables.cand_v, hammer_window_ms=0.5)
+        assert wide.hammer_window_ms == 0.5
+        m = tables.valid & wide.valid
+        assert (wide.hammer_margin[m] < tables.hammer_margin[m]).all()
+
+
+class TestPhaseDecorrelation:
+    """Per-(workload, DIMM) phase schedules on the fleet's flat lane axis."""
+
+    def test_lane_matches_solo_run_suite(self, tables, wls, model):
+        """A decorrelated lane (w, d) is reproducible solo: run_suite on
+        that DIMM's table with the lane's own phase seed."""
+        res = voltron.run_fleet(wls, tables=tables, n_intervals=4,
+                                model=model, decorrelate_phases=True)
+        for di, m in enumerate(tables.modules):
+            for wi, (name, _) in enumerate(wls):
+                seed = voltron._lane_phase_seed(name, m, None)
+                solo = voltron.run_suite([wls[wi]], n_intervals=4,
+                                         model=model, phase_seed=seed,
+                                         tables=tables.select([m]))[0]
+                np.testing.assert_array_equal(
+                    res.selected_voltages[wi, di], solo.selected_voltages,
+                    err_msg=f"{m}/{name}")
+                np.testing.assert_allclose(
+                    res.perf_loss_pct[wi, di], solo.perf_loss_pct,
+                    atol=ATOL, err_msg=f"{m}/{name}")
+
+    def test_decorrelated_differs_from_shared(self, tables, wls, model):
+        shared = voltron.run_fleet(wls, tables=tables, n_intervals=6,
+                                   model=model)
+        dec = voltron.run_fleet(wls, tables=tables, n_intervals=6,
+                                model=model, decorrelate_phases=True)
+        assert not np.allclose(shared.perf_loss_pct, dec.perf_loss_pct)
+        # shared mode: every DIMM of a workload sees identical phases, so
+        # decorrelation is the only thing breaking column symmetry here
+        ph_shared = voltron._phase_matrix(["x"], 6,
+                                          voltron.DEFAULT_INTERVAL_CYCLES,
+                                          None, 0.15)
+        assert ph_shared.shape == (6, 1)
+
+    def test_explicit_lane_phases_accepted(self, tables, wls, model):
+        """run_fleet_batched takes a [T, W*D] matrix directly and rejects
+        any other width."""
+        wb = engine.WorkloadBatch.from_workloads(wls)
+        w, d, t = wb.n_workloads, tables.n_dimms, 3
+        lane_phases = voltron.fleet_phase_matrix(
+            wb.names, tables.modules, t, voltron.DEFAULT_INTERVAL_CYCLES,
+            None, 0.15)
+        assert lane_phases.shape == (t, w * d)
+        res = fleet.run_fleet_batched(wb, tables, lane_phases,
+                                      model.coef_low, model.coef_high, 5.0)
+        assert res.perf_loss_pct.shape == (w, d)
+        with pytest.raises(ValueError):
+            fleet.run_fleet_batched(wb, tables, lane_phases[:, :-1],
+                                    model.coef_low, model.coef_high, 5.0)
+
+    def test_lane_seed_independent_of_batch_composition(self):
+        a = voltron._lane_phase_seed("stream", "B2", None)
+        b = voltron._lane_phase_seed("stream", "B2", None)
+        assert a == b
+        assert a != voltron._lane_phase_seed("stream", "B3", None)
+        assert a != voltron._lane_phase_seed("mcf", "B2", None)
+        assert a != voltron._lane_phase_seed("stream", "B2", 7)
 
 
 class TestMinLatencyDispatch:

@@ -1,0 +1,211 @@
+"""RowHammer-under-reduced-voltage stress scenario.
+
+Covers the disturbance model (:mod:`repro.dram.errors`), the scalar
+reference (:func:`repro.dram.test1.run_hammer`) and the batched sweep on
+the Test-1 flat axis (:func:`repro.engine.test1.run_hammer_batch`), which
+must be bit-exact against the scalar per-bank loop on matched PRNG keys.
+Monotonicity invariants (victim flips non-decreasing in hammer count,
+threshold non-increasing as the wordline voltage drops) are property-tested
+standalone.
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro import engine, hw
+from repro.dram import chips, errors, test1
+from repro.engine import dispatch, test1 as engine_test1
+
+BATCH_FIELDS = ("bit_errors", "erroneous_lines", "error_rows")
+
+
+def _dimm(module):
+    return [d for d in chips.population() if d.module == module][0]
+
+
+class TestHammerModel:
+    """The voltage-dependent per-cell disturbance threshold."""
+
+    def test_threshold_monotone_in_voltage(self):
+        """Lower wordline voltage -> weaker cell charge -> the first-flip
+        hammer count can only drop (non-increasing as voltage drops)."""
+        v = np.arange(0.9, 1.351, 0.025)
+        th = errors.hammer_threshold(1.0, v)
+        assert (np.diff(th) > 0).all()          # strictly increasing in v
+
+    def test_threshold_monotone_in_field(self):
+        f = np.linspace(0.0, 2.0, 9)
+        th = errors.hammer_threshold(f, 1.2)
+        assert (np.diff(th) < 0).all()          # more susceptible -> lower
+
+    def test_threshold_nominal_scale(self):
+        """At nominal voltage and zero susceptibility the threshold is the
+        calibrated HC0 constant exactly."""
+        np.testing.assert_allclose(
+            errors.hammer_threshold(0.0, hw.VDD_NOMINAL), errors.HAMMER_HC0)
+
+    def test_flip_prob_zero_at_and_below_threshold(self):
+        """A true first-flip threshold: probability is *exactly* zero for
+        any hammer count at or below it (the _trunc_phi cutoff), and
+        positive once well past it."""
+        th = float(errors.hammer_threshold(1.2, 1.1))
+        p = errors.hammer_flip_probs(1.2, 1.1, np.array([1.0, th / 2, th]))
+        assert (p == 0.0).all()
+        assert errors.hammer_flip_probs(1.2, 1.1, th * 10) > 0
+
+    def test_flip_prob_monotone_in_hammer_count(self):
+        h = np.logspace(2, 8, 25)
+        p = errors.hammer_flip_probs(1.3, 1.05, h)
+        assert (np.diff(p) >= 0).all()
+        assert p[-1] > p[0]
+
+    def test_word_probs_aggressors_exactly_zero(self):
+        """Even (aggressor) rows never flip — the aggressor/victim
+        structure lives in the probability table itself."""
+        field = np.full(8, 1.5)
+        p = errors.hammer_word_probs(field, 1.0, 1e7, rows=16)
+        assert p.shape == (16,)
+        assert (p[0::2] == 0.0).all()
+        assert (p[1::2] > 0.0).all()
+
+    def test_exposure_refresh_window_activations(self):
+        """0.25 ms window / (tRAS + tRP) row cycle time, in activations."""
+        np.testing.assert_allclose(
+            errors.hammer_exposure(35.0, 15.0, 0.25), 0.25e6 / 50.0)
+        # slower row cycle -> fewer activations fit in the window
+        assert errors.hammer_exposure(35.0, 15.0) \
+            < errors.hammer_exposure(25.0, 10.0)
+
+
+class TestBatchedHammer:
+    """engine.test1.run_hammer_batch vs the scalar dram.test1 loop."""
+
+    V_GRID = np.asarray([1.25, 1.10, 0.95])
+    H_GRID = np.asarray([1e4, 3e5, 3e6])
+    KW = dict(rounds=2, rows=16, row_bytes=1024, seed=3)
+
+    @pytest.fixture(scope="class")
+    def sub_grid(self):
+        return engine.DimmGrid.from_population(("A1", "B2", "C2"))
+
+    @pytest.fixture(scope="class")
+    def batched(self, sub_grid):
+        return engine_test1.run_hammer_batch(sub_grid, self.V_GRID,
+                                             self.H_GRID, **self.KW)
+
+    @pytest.fixture(scope="class")
+    def scalar(self, sub_grid):
+        return engine_test1.run_hammer_batch(sub_grid, self.V_GRID,
+                                             self.H_GRID, impl="scalar",
+                                             **self.KW)
+
+    def test_shapes(self, batched):
+        d, v, h, r = 3, self.V_GRID.size, self.H_GRID.size, 2
+        assert batched.bit_errors.shape == (d, v, h, r)
+        assert batched.error_rows.shape == (d, v, h, r, 8, 16)
+        assert batched.total_bits == 8 * 16 * 256 * 32
+
+    def test_bit_exact_vs_scalar(self, batched, scalar):
+        for f in BATCH_FIELDS:
+            np.testing.assert_array_equal(getattr(batched, f),
+                                          getattr(scalar, f), err_msg=f)
+
+    def test_matches_dram_test1_directly(self, sub_grid, batched):
+        """Spot-check one element straight against dram.test1.run_hammer
+        (not the wrapped scalar impl)."""
+        d = sub_grid.dimms[1]
+        r = test1.run_hammer(d, float(self.V_GRID[2]),
+                             float(self.H_GRID[2]), rows=16, row_bytes=1024,
+                             seed=3 + 1)
+        assert batched.bit_errors[1, 2, 2, 1] == r.bit_errors
+        assert batched.erroneous_lines[1, 2, 2, 1] == r.erroneous_lines
+        np.testing.assert_array_equal(batched.error_rows[1, 2, 2, 1],
+                                      r.error_rows)
+
+    def test_aggressor_rows_never_flip(self, batched):
+        assert not batched.error_rows[..., 0::2].any()
+        assert batched.error_rows[..., 1::2].any()   # victims do, at 3e6
+
+    def test_flips_monotone_in_hammer_count(self, batched):
+        """Same PRNG draws across the H axis, probabilities monotone in h
+        -> every flip at h is still a flip at h' > h."""
+        assert (np.diff(batched.bit_errors, axis=2) >= 0).all()
+        along_h = np.diff(batched.error_rows.astype(np.int8), axis=2)
+        assert (along_h >= 0).all()
+
+    def test_flips_monotone_as_voltage_drops(self, batched):
+        """V_GRID is descending, so flips are non-decreasing along axis 1
+        (matched draws again)."""
+        assert (np.diff(batched.bit_errors, axis=1) >= 0).all()
+
+    def test_single_dispatched_call(self, sub_grid):
+        """Acceptance: the whole D x V x H x R sweep is ONE flat-batch
+        dispatch under entry "hammer" — no Python loop over DIMMs or
+        voltages."""
+        dispatch.reset_stats()
+        engine_test1.run_hammer_batch(sub_grid, self.V_GRID, self.H_GRID,
+                                      **self.KW)
+        s = dispatch.stats("hammer")
+        assert s["calls"] == 1
+        assert dispatch.stats("test1")["calls"] == 0
+
+    def test_requires_real_dimms(self):
+        synth = engine.DimmGrid.from_vendor_z("A", [0.0])
+        with pytest.raises(ValueError):
+            engine_test1.run_hammer_batch(synth, [1.2], [1e6])
+
+    def test_unknown_impl_rejected(self, sub_grid):
+        with pytest.raises(ValueError):
+            engine_test1.run_hammer_batch(sub_grid, [1.2], [1e6],
+                                          impl="banana")
+        with pytest.raises(ValueError):
+            engine_test1.run_hammer_batch(sub_grid, [1.2], [1e6],
+                                          dispatch="banana")
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**30), n=st.integers(1, 3),
+       rows=st.sampled_from([8, 16]),
+       row_bytes=st.sampled_from([1024, 2048]), rounds=st.integers(1, 2))
+def test_property_batched_hammer_matches_scalar(seed, n, rows, row_bytes,
+                                                rounds):
+    """Random DIMM/voltage/hammer-count/geometry grids: batched == scalar,
+    bit-exact, because both draw the same per-(DIMM, round, bank) keys and
+    share one elementwise probability table."""
+    rng = np.random.default_rng(seed)
+    pop = engine.DimmGrid.from_population()
+    mods = tuple(rng.choice(np.asarray(pop.modules), size=n, replace=False))
+    sub = pop.select(mods)
+    v = np.round(rng.uniform(0.9, 1.35, size=int(rng.integers(1, 3))), 4)
+    h = 10.0 ** rng.uniform(3.0, 7.0, size=int(rng.integers(1, 3)))
+    kw = dict(rounds=rounds, rows=rows, row_bytes=row_bytes,
+              seed=int(rng.integers(0, 100)))
+    b = engine_test1.run_hammer_batch(sub, v, h, **kw)
+    s = engine_test1.run_hammer_batch(sub, v, h, impl="scalar", **kw)
+    for f in BATCH_FIELDS:
+        np.testing.assert_array_equal(getattr(b, f), getattr(s, f),
+                                      err_msg=f)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**30), v=st.floats(0.9, 1.35),
+       field=st.floats(0.0, 2.0))
+def test_property_threshold_voltage_monotone(seed, v, field):
+    """Standalone invariant: for any cell, dropping the wordline voltage
+    never raises the first-flip threshold."""
+    rng = np.random.default_rng(seed)
+    dv = rng.uniform(0.005, 0.2)
+    assert errors.hammer_threshold(field, v - dv) \
+        <= errors.hammer_threshold(field, v)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**30), v=st.floats(0.9, 1.35),
+       field=st.floats(0.0, 2.0))
+def test_property_flips_hammer_monotone(seed, v, field):
+    """Standalone invariant: victim flip probability is non-decreasing in
+    the hammer count, everywhere on the (field, voltage) plane."""
+    rng = np.random.default_rng(seed)
+    h = np.sort(10.0 ** rng.uniform(2.0, 8.0, size=6))
+    p = errors.hammer_flip_probs(field, v, h)
+    assert (np.diff(p) >= 0).all()

@@ -263,6 +263,83 @@ def test_midstream_table_drop_and_rederive():
     check_parity(bad_req, res_again)
 
 
+def test_midstream_rederive_with_hammer_skewed_tables():
+    """Mid-stream drop + re-derive with hammer-*aware* tables: the
+    reinstalled row carries a skewed disturbance threshold, the service
+    serves against the raised safety floor, and the reported per-candidate
+    hammer margin is the reinstalled one."""
+    grid, tables, wls, model = _env()
+    di = tables.modules.index("B2")
+    k_low = np.where(tables.valid[di])[0][0]
+    scale = 0.9 / tables.hammer_margin[di, k_low]
+    skewed = fleet.build_tables(grid.select(["B2"]), tables.cand_v,
+                                hammer_scale={"B2": scale})
+    assert skewed.valid.sum() < tables.valid[di].sum()   # the floor bit
+
+    service = make_service(window_s=0.01)
+    name = service.workload_names[0]
+    req = svc.FleetRequest((name,), ("B2",), n_intervals=N_INTERVALS)
+    service.drop_table("B2")
+    assert isinstance(serve_all(service, [req])[0],
+                      svc.TableUnavailableError)
+    service.install_tables(skewed)
+    res = serve_all(service, [req])[0]
+    assert not isinstance(res, Exception), res
+
+    # reference: the direct batch path on the same skewed tables
+    by_name = dict(wls)
+    wb = WorkloadBatch.from_workloads([(name, by_name[name])])
+    from repro.core import voltron
+    phases = voltron._phase_matrix(wb.names, N_INTERVALS,
+                                   voltron.DEFAULT_INTERVAL_CYCLES,
+                                   None, 0.15)
+    ref = fleet.run_fleet_batched(wb, skewed, phases, model.coef_low,
+                                  model.coef_high, req.target_loss_pct,
+                                  dispatch="direct")
+    np.testing.assert_array_equal(res.selected_voltages,
+                                  ref.selected_voltages)
+    np.testing.assert_array_equal(res.hammer_margin, skewed.hammer_margin)
+    # the served selections respect the hammer-raised floor
+    chosen = set(np.unique(res.selected_voltages))
+    assert chosen <= set(skewed.cand_v[skewed.valid[0]])
+    # restore the shared _env tables for the tests that follow
+    service.install_tables(tables)
+    restored = serve_all(service, [req])[0]
+    assert not isinstance(restored, Exception), restored
+    check_parity(req, restored)
+
+
+def test_fleet_decorrelated_phases_parity():
+    """FleetRequest(decorrelate_phases=True): each (workload, DIMM) lane
+    draws its own phase column; the coalesced result matches the direct
+    batch path on the same [T, W*D] matrix."""
+    from repro.core import voltron
+    _, tables, wls, model = _env()
+    service = make_service(window_s=0.01)
+    names = service.workload_names[:2]
+    req = svc.FleetRequest(names, ("A1", "B2"), n_intervals=N_INTERVALS,
+                           decorrelate_phases=True)
+    res = serve_all(service, [req])[0]
+    assert not isinstance(res, Exception), res
+
+    by_name = dict(wls)
+    wb = WorkloadBatch.from_workloads([(n, by_name[n]) for n in names])
+    phases = voltron.fleet_phase_matrix(
+        wb.names, req.modules, N_INTERVALS,
+        voltron.DEFAULT_INTERVAL_CYCLES, None, 0.15)
+    ref = fleet.run_fleet_batched(
+        wb, tables.select(list(req.modules)), phases, model.coef_low,
+        model.coef_high, req.target_loss_pct, dispatch="direct")
+    np.testing.assert_array_equal(res.selected_voltages,
+                                  ref.selected_voltages)
+    np.testing.assert_allclose(res.perf_loss_pct, ref.perf_loss_pct,
+                               rtol=1e-5, atol=1e-8)
+    # and it genuinely decorrelates: differs from the shared-phase result
+    shared = serve_all(service, [svc.FleetRequest(
+        names, ("A1", "B2"), n_intervals=N_INTERVALS)])[0]
+    assert not np.allclose(res.perf_loss_pct, shared.perf_loss_pct)
+
+
 def test_unknown_module_and_workload_fail_typed():
     service = make_service(window_s=0.01)
     with pytest.raises(svc.ServiceError):
