@@ -1,0 +1,214 @@
+"""Per-component power subsystem: batched component breakdown vs the
+legacy scalar sum, and heterogeneous-fleet shape stability.
+
+Acceptance measurements for :mod:`repro.power`:
+
+1. **Batched vs scalar component energy** — the six-component breakdown
+   (`power.component_power` with per-lane coefficient rows) evaluated as
+   one jit call over a flat [N] axis of operating points, versus the
+   scalar float64 parity path (`memsim.energy.dram_component_power`, one
+   Python call per point).  Reported: elements/s for both and the speedup
+   (the gated metric — a same-machine ratio, like the Test-1 gate), plus
+   the max relative error of the batched component *sums* against the
+   legacy scalar ``dram_power`` totals (acceptance: <= 1e-5).
+
+2. **Heterogeneous fleet stream** — a stream of (W, D) fleet shapes with
+   mixed ``ddr3l``/``hbm2`` device models per DIMM.  The per-lane
+   coefficient rows are batched operands (the operand structure never
+   changes with the model mix), so dispatch retraces stay bounded by the
+   bucket ladder exactly as for homogeneous fleets (the deterministic
+   gated counter), and voltage selections are bit-equal to the
+   homogeneous run (acceptance — Algorithm 1 never reads the power
+   model).
+
+``python -m benchmarks.energy_bench [OUT.json]`` writes the metrics as a
+JSON artifact (``scripts/check.sh`` stores it as
+``artifacts/BENCH_energy.json`` and gates regressions against the
+committed baseline).
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+
+N_BATCH = 65536        # flat-axis lanes for the batched path
+N_SCALAR = 2048        # points for the Python-loop reference timing
+MODULES = ("A1", "B2", "C2")
+HETERO = {"B2": "hbm2"}
+N_WORKLOADS = 4
+N_INTERVALS = 6
+# (workload count, module count) fleet shapes revisiting canonical buckets
+STREAM = ((4, 3), (3, 3), (4, 2), (2, 2), (4, 3))
+
+
+def _sample_points(n: int, rng: np.random.Generator) -> tuple:
+    points = {"v_array": rng.uniform(0.9, 1.35, n),
+              "v_periph": rng.uniform(1.2, 1.35, n),
+              "freq_ratio": rng.uniform(0.65, 1.0, n)}
+    activity = {"acts_per_ns": rng.uniform(0.0, 0.05, n),
+                "lines_per_ns": rng.uniform(0.0, 0.2, n)}
+    return points, activity
+
+
+def _measure() -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro import engine, power
+    from repro.core import perf_model, voltron
+    from repro.engine import dispatch, fleet
+    from repro.memsim import energy, workloads
+
+    rng = np.random.default_rng(20260808)
+    points, activity = _sample_points(N_BATCH, rng)
+    # mixed per-lane models — the heterogeneous flat-batch form
+    names = np.where(rng.uniform(size=N_BATCH) < 0.5, "ddr3l", "hbm2")
+    rows = power.coeff_rows(names, np.float32)
+
+    # -- scalar reference: one Python call per point -----------------------
+    def scalar_loop(n):
+        out = np.empty((n, len(power.COMPONENTS)))
+        for i in range(n):
+            comp = energy.dram_component_power(
+                points["v_array"][i], points["v_periph"][i],
+                points["freq_ratio"][i], activity["acts_per_ns"][i],
+                activity["lines_per_ns"][i], device=str(names[i]))
+            out[i] = [comp[k] for k in power.COMPONENTS]
+        return out
+
+    scalar_loop(64)                                   # warm imports/caches
+    scalar_s = np.inf
+    for _ in range(3):
+        t0 = time.time()
+        scalar_comp = scalar_loop(N_SCALAR)
+        scalar_s = min(scalar_s, time.time() - t0)
+    scalar_eps = N_SCALAR / scalar_s
+
+    # -- batched: one jit call over the flat axis --------------------------
+    @jax.jit
+    def batched_fn(points, activity, rows):
+        comp = power.component_power(points, activity, rows)
+        return jnp.stack([comp[k] for k in power.COMPONENTS], axis=-1)
+
+    jp = {k: jnp.asarray(v, jnp.float32) for k, v in points.items()}
+    ja = {k: jnp.asarray(v, jnp.float32) for k, v in activity.items()}
+    jr = jnp.asarray(rows)
+    t0 = time.time()
+    batched = np.asarray(batched_fn(jp, ja, jr).block_until_ready())
+    compile_s = time.time() - t0
+    batch_s = np.inf
+    for _ in range(5):
+        t0 = time.time()
+        batched = np.asarray(batched_fn(jp, ja, jr).block_until_ready())
+        batch_s = min(batch_s, time.time() - t0)
+    batch_eps = N_BATCH / batch_s
+
+    # parity: batched component sums vs the legacy scalar totals
+    legacy = np.array([
+        sum(energy.dram_power(points["v_array"][i], points["v_periph"][i],
+                              points["freq_ratio"][i],
+                              activity["acts_per_ns"][i],
+                              activity["lines_per_ns"][i]))
+        for i in range(N_SCALAR) if names[i] == "ddr3l"])
+    ddr3l_rows = np.flatnonzero(names[:N_SCALAR] == "ddr3l")
+    sums = batched[ddr3l_rows].sum(axis=-1)
+    max_rel = float(np.abs(sums - legacy).max() / np.abs(legacy).max())
+    comp_rel = float(np.max(
+        np.abs(batched[:N_SCALAR] - scalar_comp)
+        / np.maximum(np.abs(scalar_comp), 1e-9)))
+
+    # -- heterogeneous fleet stream: shape stability + selections ----------
+    wls = workloads.homogeneous_workloads()[:N_WORKLOADS]
+    model = perf_model.fit()
+    grid = engine.DimmGrid.from_population(MODULES)
+    tables = voltron.fleet_tables(grid)
+    het = tables.with_device_models(HETERO)
+    hom_res = voltron.run_fleet(wls, model=model, tables=tables,
+                                n_intervals=N_INTERVALS)
+    dispatch.clear_cache()
+    dispatch.reset_stats()
+    wb_full = engine.WorkloadBatch.from_workloads(wls)
+    phases = voltron._phase_matrix(wb_full.names, N_INTERVALS,
+                                   voltron.DEFAULT_INTERVAL_CYCLES,
+                                   None, 0.15)
+    het_res = None
+    for w_count, d_count in STREAM:
+        wb = engine.WorkloadBatch.from_workloads(wls[:w_count])
+        r = fleet.run_fleet_batched(
+            wb, het.select(het.modules[:d_count]), phases[:, :w_count],
+            model.coef_low, model.coef_high, 5.0)
+        if (w_count, d_count) == (N_WORKLOADS, len(MODULES)):
+            het_res = r
+    s = dispatch.stats("fleet")
+    n_buckets = len(dispatch.bucket_ladder())
+    selections_equal = bool(np.array_equal(het_res.selected_voltages,
+                                           hom_res.selected_voltages))
+    components_differ = not np.allclose(het_res.pt_component_j,
+                                        hom_res.pt_component_j)
+
+    return {
+        "n_batch": N_BATCH,
+        "n_scalar": N_SCALAR,
+        "scalar_elements_per_s": scalar_eps,
+        "batched_elements_per_s": batch_eps,
+        "speedup_vs_scalar": batch_eps / scalar_eps,
+        "compile_s": compile_s,
+        "steady_s": batch_s,
+        "total_sum_max_rel_err": max_rel,
+        "component_max_rel_err": comp_rel,
+        "hetero": {
+            "n_requests": len(STREAM),
+            "dispatch_retraces": int(s["compiles"]),
+            "dispatch_hits": int(s["hits"]),
+            "n_buckets": n_buckets,
+            "selections_bit_equal": selections_equal,
+            "components_differ": bool(components_differ),
+        },
+    }
+
+
+def energy_sweep():
+    m = _measure()
+    h = m["hetero"]
+    return [
+        ("energy/components",
+         f"{m['n_batch']} lanes x {6} components",
+         f"{m['speedup_vs_scalar']:.0f}x vs scalar loop "
+         f"(sum err {m['total_sum_max_rel_err']:.1e})"),
+        ("energy/hetero_fleet",
+         f"{h['n_requests']} mixed ddr3l+hbm2 fleet shapes",
+         f"retraces={h['dispatch_retraces']} <= buckets={h['n_buckets']}, "
+         f"selections_bit_equal={h['selections_bit_equal']}"),
+    ]
+
+
+# separates compile/steady internally; the harness must not run it twice
+energy_sweep.self_timed = True
+
+
+def main() -> None:
+    from repro.engine import dispatch
+    dispatch.enable_persistent_cache()
+    m = _measure()
+    print(json.dumps(m, indent=2))
+    if len(sys.argv) > 1:
+        with open(sys.argv[1], "w") as f:
+            json.dump(m, f, indent=2)
+        print(f"wrote {sys.argv[1]}", file=sys.stderr)
+    h = m["hetero"]
+    ok = (m["total_sum_max_rel_err"] <= 1e-5
+          and m["component_max_rel_err"] <= 1e-4
+          and h["selections_bit_equal"]
+          and h["components_differ"]
+          and h["dispatch_retraces"] <= h["n_buckets"]
+          and h["dispatch_hits"] >= 1)
+    if not ok:
+        print("ACCEPTANCE FAILURE", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

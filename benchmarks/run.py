@@ -26,15 +26,17 @@ def main() -> None:
 
     dispatch.enable_persistent_cache()
 
-    from benchmarks import (dispatch_bench, engine_bench, fleet_bench,
-                            kernel_bench, paper_figures, population_bench,
-                            roofline_report, serve_bench, test1_bench)
+    from benchmarks import (dispatch_bench, energy_bench, engine_bench,
+                            fleet_bench, kernel_bench, paper_figures,
+                            population_bench, roofline_report, serve_bench,
+                            test1_bench)
     pattern = sys.argv[1] if len(sys.argv) > 1 else ""
     fns = list(paper_figures.ALL) + [engine_bench.engine_sweep,
                                      population_bench.population_sweep,
                                      test1_bench.test1_sweep,
                                      dispatch_bench.dispatch_sweep,
                                      fleet_bench.fleet_sweep,
+                                     energy_bench.energy_sweep,
                                      serve_bench.serve_sweep,
                                      kernel_bench.kernels,
                                      roofline_report.roofline]

@@ -11,6 +11,10 @@ population — the paper's two halves closed into one loop.
    one dispatched, mesh-sharded ``lax.scan`` and report per-vendor
    distributions of energy savings and realized performance loss (the
    Fig. 14/17 quantities, fleet-resolved).
+3. Break the DRAM energy down per component and per vendor (the Fig. 16
+   analogue): which component — array vs peripheral, static vs dynamic —
+   the reduced-voltage savings actually come from, on a heterogeneous
+   fleet mixing DDR3L DIMMs with an HBM2-class part.
 
   PYTHONPATH=src python examples/fleet_voltron.py
 """
@@ -56,6 +60,26 @@ def main():
             print(f"    vendor {vendor}: mean {d['mean']:+.2f}  "
                   f"p50 {d['p50']:+.2f}  range [{d['min']:+.2f}, "
                   f"{d['max']:+.2f}]")
+
+    print("\n== Per-component DRAM energy by vendor (Fig. 16 analogue) ==")
+    # heterogeneous fleet: give one DIMM per vendor an HBM2-class power
+    # model — the per-lane coefficient rows ride the same flat batch axis
+    hbm_dimms = {f"{v}1": "hbm2" for v in "ABC"}
+    het = tables.with_device_models(hbm_dimms)
+    res_het = voltron.run_fleet(wls, tables=het, n_intervals=8)
+    n_hbm = sum(m == "hbm2" for m in res_het.device_models)
+    print(f"  device models: {res_het.n_dimms - n_hbm}x ddr3l + "
+          f"{n_hbm}x hbm2 ({', '.join(sorted(hbm_dimms))})")
+    comp_by_vendor = res_het.vendor_component_energy()
+    components = next(iter(comp_by_vendor.values())).keys()
+    header = "  {:18s}".format("component") + "".join(
+        f"  vendor {v}: sav%" for v in sorted(comp_by_vendor))
+    print(header)
+    for comp in components:
+        row = "  {:18s}".format(comp)
+        for vendor in sorted(comp_by_vendor):
+            row += f"  {comp_by_vendor[vendor][comp]['savings_pct']:+13.2f}"
+        print(row)
 
     # a second, differently-shaped fleet request (fewer workloads, same
     # DIMMs) lands in the same canonical bucket of the dispatch layer and

@@ -51,6 +51,14 @@ SPECS = {
     "BENCH_fleet.json": {
         "stream.dispatch_retraces": "lower",
     },
+    "BENCH_energy.json": {
+        # batched six-component breakdown vs the scalar python loop —
+        # same-machine ratio like the test1 gate
+        "speedup_vs_scalar": "higher",
+        # heterogeneous device models must not break shape stability:
+        # per-lane coefficient rows are operands, never statics
+        "hetero.dispatch_retraces": "lower",
+    },
     "BENCH_serve.json": {
         "open_loop.speedup_vs_serial": "higher",
     },

@@ -44,6 +44,12 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.fleet_bench artifacts/BENCH_fleet.json
 
+# per-component power: batched six-component breakdown vs the scalar
+# loop + heterogeneous-fleet shape stability (exits nonzero if component
+# sums drift from the legacy totals or selections depend on the model)
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.energy_bench artifacts/BENCH_energy.json
+
 # streaming fleet service: coalesced open-loop throughput vs the
 # request-at-a-time loop + admission acceptance (exits nonzero below the
 # 5x serving bar or on any budget violation)

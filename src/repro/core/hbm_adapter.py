@@ -25,8 +25,7 @@ import dataclasses
 
 import numpy as np
 
-from repro import hw
-from repro.dram import circuit
+from repro import hw, power
 
 # Chip power split at nominal (engineering estimates for a v5e-class chip):
 COMPUTE_POWER_FRAC = 0.55
@@ -40,23 +39,26 @@ class HbmState:
     v_rel: float              # HBM rail voltage relative to nominal
     bw_derate: float          # effective bandwidth multiplier (<= 1)
     energy_scale: float       # HBM energy per byte, relative (~ V^2)
+    model: str = "hbm2"       # repro.power device model the ladder is from
 
 
-def _derate(v_rel: float) -> float:
-    """Bandwidth derate from the calibrated circuit model: array operations
-    slow down by the same latency ratio the paper measured, which at a
-    fixed interface frequency appears as reduced effective bandwidth."""
-    v = hw.VDD_NOMINAL * v_rel
-    base = float(np.asarray(circuit.raw_latency("rcd", hw.VDD_NOMINAL)))
-    slow = float(np.asarray(circuit.raw_latency("rcd", v)))
-    return base / slow
+def _derate(v_rel: float, device: power.DeviceModel = power.HBM2) -> float:
+    """Bandwidth derate from the device model's timing coupling (the same
+    calibrated alpha-power-law latency ratio the paper measured): array
+    operations slow down by ``timing_scale``, which at a fixed interface
+    frequency appears as reduced effective bandwidth."""
+    return 1.0 / device.timing_scale(hw.VDD_NOMINAL * v_rel)
 
 
-def default_states(n: int = 6) -> list:
-    """Voltage ladder from nominal down to the signal-integrity floor."""
+def default_states(n: int = 6,
+                   device: power.DeviceModel = power.HBM2) -> list:
+    """Voltage ladder from nominal down to the signal-integrity floor,
+    derived from ``device``'s timing and energy coupling."""
     v_rels = np.linspace(1.0, 0.70, n)     # 1.35 V .. ~0.95 V equivalent
-    return [HbmState(f"V{int(round(v * 100))}", float(v), _derate(float(v)),
-                     float(v ** 2)) for v in v_rels]
+    return [HbmState(f"V{int(round(v * 100))}", float(v),
+                     _derate(float(v), device),
+                     device.energy_scale(float(v)), device.name)
+            for v in v_rels]
 
 
 @dataclasses.dataclass(frozen=True)

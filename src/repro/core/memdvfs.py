@@ -16,9 +16,12 @@ import dataclasses
 
 import numpy as np
 
+from repro import hw, power
 from repro.memsim import system
 
-FREQ_STEPS = [1600.0, 1333.0, 1066.0]
+# The V-f ladder lives on the DDR3L device model (repro.power); MemDVFS
+# steps through its rates with the rail tied to each step.
+FREQ_STEPS = [rate for rate, _ in power.DDR3L.dvfs_rails]
 # switch down when the bandwidth the workload demands fits the lower
 # frequency with margin (the paper's fixed-threshold policy); memory-
 # intensive workloads exceed it almost always, so MemDVFS rarely scales
@@ -42,7 +45,7 @@ def demand_utilization(cores: tuple) -> float:
     Uses the *unthrottled* instruction rate (ipc_base): the controller must
     not let a memory-throttled observation justify staying throttled."""
     ch = system.dram_timing.DEFAULT_CHANNEL
-    demand = sum(b.ipc_base * 2.0 * (b.mpki / 1000.0) * 64.0
+    demand = sum(b.ipc_base * hw.CPU_FREQ_GHZ * (b.mpki / 1000.0) * 64.0
                  * (1.0 + b.write_frac) for b in cores)      # bytes/ns
     return demand / ch.peak_bw_gbps
 

@@ -171,7 +171,7 @@ def run_suite(wls, target_loss_pct: float = DEFAULT_TARGET_PCT,
                            phase_seed, phase_amplitude)
     if tables is None:
         cand_v, lat_feat, timings = _candidate_grid(bank_locality)
-        cand_valid = None
+        cand_valid, device_model = None, None
     else:
         if tables.n_dimms != 1:
             raise ValueError("run_suite takes a single-DIMM table "
@@ -182,9 +182,10 @@ def run_suite(wls, target_loss_pct: float = DEFAULT_TARGET_PCT,
                              "does not apply to characterized safe tables")
         cand_v, lat_feat = tables.cand_v, tables.lat_feat[0]
         timings, cand_valid = tables.timings[0], tables.valid[0]
+        device_model = tables.device_models[0]
     res = engine.run_batched(wb, phases, model.coef_low, model.coef_high,
                              target_loss_pct, cand_v, lat_feat, timings,
-                             cand_valid=cand_valid)
+                             cand_valid=cand_valid, device_model=device_model)
     return [ControllerRun(
         res.names[w], target_loss_pct, res.selected_voltages[w],
         res.perf_loss_pct[w], res.dram_power_savings_pct[w],
@@ -283,7 +284,8 @@ def _operating_point(v: float, bank_locality: bool) -> system.OperatingPoint:
 
 
 def fleet_tables(grid=None, *, max_latency: float = 20.0,
-                 temp_c: float = 20.0, dispatch: str = "auto"):
+                 temp_c: float = 20.0, dispatch: str = "auto",
+                 device_models=None):
     """Per-DIMM safe candidate tables for the Algorithm-1 voltages.
 
     For every characterized DIMM and every candidate (plus the 1.35 V
@@ -292,6 +294,10 @@ def fleet_tables(grid=None, *, max_latency: float = 20.0,
     ``find_min_latency_batch`` — e.g. Vendor C below its recovery floor)
     are excluded from that DIMM's Algorithm-1 selection.  ``grid`` defaults
     to the full Table 7 population (:class:`repro.engine.DimmGrid`).
+
+    ``device_models``: optional per-DIMM :mod:`repro.power` model
+    assignment (``{module: name}`` or [D] sequence) for heterogeneous
+    fleets; default ``ddr3l`` everywhere.
     """
     from repro import engine
     from repro.engine import fleet
@@ -299,7 +305,8 @@ def fleet_tables(grid=None, *, max_latency: float = 20.0,
         grid = engine.DimmGrid.from_population()
     cand_v = np.array(CANDIDATE_VOLTAGES + [hw.VDD_NOMINAL])
     return fleet.build_tables(grid, cand_v, max_latency=max_latency,
-                              temp_c=temp_c, dispatch=dispatch)
+                              temp_c=temp_c, dispatch=dispatch,
+                              device_models=device_models)
 
 
 def run_fleet(wls, grid=None, target_loss_pct: float = DEFAULT_TARGET_PCT,

@@ -109,6 +109,42 @@ parity reference).  The contract:
   (``launch.mesh.batch_sharding`` / ``chunked_batch_sharding``) always
   splits evenly — never re-pad a bucketed batch for the mesh.
 
+The per-component power axis and device models
+==============================================
+
+DRAM power is computed per component, not as one scalar:
+:mod:`repro.power` defines the six-component DRAMPower-style decomposition
+(``background_array``, ``refresh``, ``act_pre``, ``rw_array`` in the array
+domain — scaling with V_array**2 — and ``background_periph``, ``rw_periph``
+in the peripheral domain — scaling with V_periph**2 and frequency), with
+row-buffer locality as the coupling variable between the activity rates
+(``acts_per_ns = lines_per_ns * (1 - row_hit_rate)``).  The engine
+conventions:
+
+- **Component axis:** stacked component arrays put the component last, in
+  ``power.COMPONENTS`` order — ``[..., NC]`` (``BatchResult.components_w``
+  / ``components_j`` unstack it to dicts; ``FleetBatchResult
+  .base_component_j`` / ``pt_component_j`` are [W, D, NC] summed over
+  intervals, with ``vendor_component_energy()`` as the Fig. 15-17-analogue
+  report).  The legacy scalar totals are exact sums over the axis
+  (``power.power_totals`` regroups the components into the pre-refactor
+  (dynamic, static) split), so the axis is purely additive reporting.
+- **Device models on the flat batch axis:** a ``power.DeviceModel`` names
+  a part class (registered ``ddr3l`` / ``hbm2`` / ``lpddr4``) as
+  coefficients of the same six components.  Homogeneous sweeps pass the
+  model as a hashable static (``simulate_batch(...,
+  device_model="hbm2")``); heterogeneous fleets gather one
+  ``power.coeff_rows`` row per lane **eagerly at table construction**
+  (``FleetTables.device_models`` — one extra [D] column, tiled per
+  workload) so inside jit the model is just more per-lane operands, with
+  no Python dispatch and no operand-structure change (the coefficient
+  operand is always present, defaulting to ``ddr3l`` rows).
+- **Selections are model-independent:** Algorithm 1 reads only the loss
+  predictions, never the energy accumulators, so fleet voltage selections
+  are bit-equal across device-model assignments; baseline energies use
+  the *lane's own* model at nominal (the comparison is reduced-voltage vs
+  nominal on the same part, never across parts).
+
 The serving contract
 ====================
 
@@ -136,7 +172,11 @@ first.  The contract:
   rows at flush time; ``drop_table`` mid-stream fails that DIMM's
   queued/future requests fast with ``TableUnavailableError`` while
   unrelated lanes complete, and ``fleet.build_tables`` +
-  ``install_tables`` restores service without a restart.
+  ``install_tables`` restores service without a restart.  Each installed
+  row also carries its DIMM's device-model name, so heterogeneous fleet
+  requests coalesce with homogeneous ones (the per-lane coefficient rows
+  are batched operands, not statics); ``FleetRequest.device_model``
+  overrides the model for every lane of one request.
 
 ``launch.fleet_serve`` drives the service under bursty open-loop load;
 ``benchmarks/serve_bench.py`` gates the coalescing speedup.

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import power as power_lib
 from repro.engine import dispatch as dispatch_lib
 from repro.engine import solve as engine_solve
 from repro.engine.batch import WorkloadBatch
@@ -52,6 +53,10 @@ class ControllerBatchResult:
     dram_energy_savings_pct: np.ndarray
     system_energy_savings_pct: np.ndarray
     perf_per_watt_gain_pct: np.ndarray
+    # per-component DRAM energy summed over intervals, [W, NC] in
+    # repro.power.COMPONENTS order (None on legacy constructions)
+    base_component_j: np.ndarray | None = None
+    pt_component_j: np.ndarray | None = None
 
 
 def _predict(coef_lo, coef_hi, lat, mpki, stall):
@@ -64,7 +69,8 @@ def _predict(coef_lo, coef_hi, lat, mpki, stall):
 
 
 def _controller_scan_fn(feats, phases, coef_lo, coef_hi, target, cand_v,
-                        lat_feat, cand_t, cand_valid, impl: str = "reference"):
+                        lat_feat, cand_t, cand_valid, model_coeffs=None,
+                        impl: str = "reference"):
     """The interval scan over W flat lanes.
 
     ``cand_t`` holds per-element [W, K] (tRCD, tRP, tRAS) candidate tables
@@ -75,6 +81,14 @@ def _controller_scan_fn(feats, phases, coef_lo, coef_hi, target, cand_v,
     a NaN prediction compares False, but the mask makes the exclusion
     explicit rather than an IEEE accident).  The fallback (last) candidate
     must be valid on every lane.
+
+    ``model_coeffs``: optional [W, NCOEFF] per-lane device-model
+    coefficient rows (:data:`repro.power.COEFF_FIELDS` order) — the
+    heterogeneous-fleet column.  Baseline and point energy both use the
+    lane's model (the baseline is the *same part* at nominal), and the
+    per-component DRAM energy is accumulated through the scan carry.
+    Selections are independent of the model: Algorithm 1 reads only the
+    loss predictions, never the energy accumulators.
     """
     w, c = feats["mpki"].shape
     nominal = {k: jnp.broadcast_to(v, (w,))
@@ -94,7 +108,8 @@ def _controller_scan_fn(feats, phases, coef_lo, coef_hi, target, cand_v,
                             / (ipc * engine_solve.CPU_FREQ_HZ), axis=-1)
         pe = engine_solve._power_energy(points, out["acts_per_ns"],
                                         out["reads_per_ns"],
-                                        jnp.sum(ipc, axis=-1), runtime_s)
+                                        jnp.sum(ipc, axis=-1), runtime_s,
+                                        model_coeffs)
         return ws, pe
 
     def step(carry, f):
@@ -123,6 +138,8 @@ def _controller_scan_fn(feats, phases, coef_lo, coef_hi, target, cand_v,
             "pt_power": sums["pt_power"] + pt_pe["system_w"],
             "base_dram_p": sums["base_dram_p"] + base_pe["dram_w"],
             "pt_dram_p": sums["pt_dram_p"] + pt_pe["dram_w"],
+            "base_comp_e": sums["base_comp_e"] + base_pe["dram_comp_j"],
+            "pt_comp_e": sums["pt_comp_e"] + pt_pe["dram_comp_j"],
         }
 
         # profile under the current operating point, then Algorithm 1:
@@ -144,11 +161,16 @@ def _controller_scan_fn(feats, phases, coef_lo, coef_hi, target, cand_v,
                  ("base_ws", "pt_ws", "base_dram_e", "pt_dram_e",
                   "base_sys_e", "pt_sys_e", "base_power", "pt_power",
                   "base_dram_p", "pt_dram_p")}
+    nc = len(power_lib.COMPONENTS)
+    init_sums["base_comp_e"] = jnp.zeros((w, nc), jnp.float32)
+    init_sums["pt_comp_e"] = jnp.zeros((w, nc), jnp.float32)
     init_idx = jnp.full((w,), cand_v.shape[0] - 1, jnp.int32)   # start at nom
     (_, s), chosen = jax.lax.scan(step, (init_idx, init_sums), phases)
 
     return {
         "selected_idx": chosen.T,                               # [W, T]
+        "base_component_j": s["base_comp_e"],                   # [W, NC]
+        "pt_component_j": s["pt_comp_e"],
         "perf_loss_pct": 100.0 * (1.0 - s["pt_ws"] / s["base_ws"]),
         "dram_power_savings_pct":
             100.0 * (1.0 - s["pt_dram_p"] / s["base_dram_p"]),
@@ -175,14 +197,15 @@ def _controller_flat_fn(*args, impl: str):
     contract as ``solve._grid_sim_fn``)."""
     (mpki, ipc_base, mlp, row_hit, eff_banks, write_mult, alone_row_hit,
      alone_eff_banks, alone_write_mult, phases_nt, lat_feat, t_rcd, t_rp,
-     t_ras, cand_valid, coef_lo, coef_hi, target, cand_v, _valid) = args
+     t_ras, cand_valid, model_coeffs, coef_lo, coef_hi, target, cand_v,
+     _valid) = args
     feats = dict(zip(_FEAT_KEYS, (mpki, ipc_base, mlp, row_hit, eff_banks,
                                   write_mult, alone_row_hit, alone_eff_banks,
                                   alone_write_mult)))
     cand_t = {"t_rcd": t_rcd, "t_rp": t_rp, "t_ras": t_ras}
     return _controller_scan_fn(feats, phases_nt.T, coef_lo, coef_hi, target,
                                cand_v, lat_feat, cand_t, cand_valid,
-                               impl=impl)
+                               model_coeffs, impl=impl)
 
 
 def element_cost(n_intervals: int) -> int:
@@ -193,24 +216,41 @@ def element_cost(n_intervals: int) -> int:
 
 
 def flat_operands(feats: dict, phases, coef_lo, coef_hi, target_loss_pct,
-                  cand_v, lat_feat, cand_t: dict, cand_valid) -> tuple:
+                  cand_v, lat_feat, cand_t: dict, cand_valid,
+                  model_coeffs=None) -> tuple:
     """Lower interval-scan operands to ``dispatch_flat`` form.
 
     Returns ``(batched, replicated)`` exactly as ``run_flat`` passes them:
     batched = the 9 ``_FEAT_KEYS`` float32 feature arrays, the [N, T]
     transposed phase schedule, latency features, the three candidate-timing
-    tables and the validity mask; replicated = (coef_lo, coef_hi, target,
-    cand_v) float32.  The serving front-end concatenates these per-lane
-    arrays across requests, so the float32 conversions must happen here —
-    once, identically — for coalesced lanes to stay bit-exact against the
-    per-request path."""
+    tables, the validity mask and the [N, NCOEFF] device-model coefficient
+    rows; replicated = (coef_lo, coef_hi, target, cand_v) float32.  The
+    serving front-end concatenates these per-lane arrays across requests,
+    so the float32 conversions must happen here — once, identically — for
+    coalesced lanes to stay bit-exact against the per-request path.
+
+    ``model_coeffs``: per-lane [N, NCOEFF] rows (or a single model /
+    name / None — broadcast to every lane).  The coefficient operand is
+    *always* appended, defaulting to the ``ddr3l`` row, so the operand
+    count (and hence every warm executable and megabatch concatenation)
+    is the same for homogeneous and heterogeneous batches."""
     f32 = lambda x: np.asarray(x, np.float32)
     feats = {k: f32(feats[k]) for k in _FEAT_KEYS}
+    n = feats["mpki"].shape[0]
     phases = f32(phases)
     cand_t = {k: f32(cand_t[k]) for k in ("t_rcd", "t_rp", "t_ras")}
+    if model_coeffs is None or isinstance(model_coeffs,
+                                          (str, power_lib.DeviceModel)):
+        row = power_lib.coeff_rows(
+            [model_coeffs if model_coeffs is not None else "ddr3l"],
+            np.float32)
+        coeff_rows = np.broadcast_to(row, (n, row.shape[1]))
+    else:
+        coeff_rows = f32(model_coeffs)
     batched = [feats[k] for k in _FEAT_KEYS] + [
         np.ascontiguousarray(phases.T), f32(lat_feat), cand_t["t_rcd"],
-        cand_t["t_rp"], cand_t["t_ras"], np.asarray(cand_valid, bool)]
+        cand_t["t_rp"], cand_t["t_ras"], np.asarray(cand_valid, bool),
+        np.ascontiguousarray(coeff_rows)]
     replicated = (f32(coef_lo), f32(coef_hi), np.float32(target_loss_pct),
                   f32(cand_v))
     return batched, replicated
@@ -219,7 +259,8 @@ def flat_operands(feats: dict, phases, coef_lo, coef_hi, target_loss_pct,
 def run_flat(entry: str, feats: dict, phases, coef_lo, coef_hi,
              target_loss_pct, cand_v, lat_feat, cand_t: dict, cand_valid,
              *, impl: str = "auto", dispatch: str = "auto", mesh=None,
-             max_elements_resident: int | None = None) -> dict:
+             max_elements_resident: int | None = None,
+             model_coeffs=None) -> dict:
     """Run the interval scan over N flat lanes with per-element tables.
 
     ``feats``: dict of [N, C]/[N] workload features (``_wb_feats`` order);
@@ -245,7 +286,7 @@ def run_flat(entry: str, feats: dict, phases, coef_lo, coef_hi,
         impl = "pallas" if jax.default_backend() == "tpu" else "reference"
     batched, replicated = flat_operands(feats, phases, coef_lo, coef_hi,
                                         target_loss_pct, cand_v, lat_feat,
-                                        cand_t, cand_valid)
+                                        cand_t, cand_valid, model_coeffs)
     coef_lo, coef_hi, target, cand_v = replicated
     n_intervals = batched[9].shape[1]
 
@@ -257,7 +298,7 @@ def run_flat(entry: str, feats: dict, phases, coef_lo, coef_hi,
             {"t_rcd": jnp.asarray(batched[11]),
              "t_rp": jnp.asarray(batched[12]),
              "t_ras": jnp.asarray(batched[13])},
-            jnp.asarray(batched[14]), impl=impl)
+            jnp.asarray(batched[14]), jnp.asarray(batched[15]), impl=impl)
     elif dispatch in ("auto", "bucketed", "chunked"):
         cfg = None if max_elements_resident is None else \
             dispatch_lib.DispatchConfig(
@@ -280,7 +321,7 @@ def run_batched(wb: WorkloadBatch, phases: np.ndarray, coef_lo, coef_hi,
                 impl: str = "auto",
                 dispatch: str = "auto",
                 cand_valid: np.ndarray | None = None,
-                mesh=None) -> ControllerBatchResult:
+                mesh=None, device_model=None) -> ControllerBatchResult:
     """Run the interval loop for all W workloads in one scan.
 
     ``phases``: [T, W] per-interval memory-intensity factors.
@@ -296,6 +337,9 @@ def run_batched(wb: WorkloadBatch, phases: np.ndarray, coef_lo, coef_hi,
     :mod:`repro.engine.dispatch` (mesh-divisible buckets, sharded flat
     axis); "direct" keeps the exact-shape jit call (the bucketed path's
     parity reference).
+    ``device_model``: optional device model (name /
+    :class:`repro.power.DeviceModel`) applied to every workload lane —
+    single-model runs; per-lane mixes go through the fleet layer.
     """
     w = wb.n_workloads
     cand_v64 = np.atleast_1d(np.asarray(cand_v, np.float64))
@@ -314,7 +358,8 @@ def run_batched(wb: WorkloadBatch, phases: np.ndarray, coef_lo, coef_hi,
              for key, a in engine_solve._wb_feats(wb).items()}
     out = run_flat("controller_scan", feats, np.asarray(phases), coef_lo,
                    coef_hi, target_loss_pct, cand_v64, lat, cand_t, valid,
-                   impl=impl, dispatch=dispatch, mesh=mesh)
+                   impl=impl, dispatch=dispatch, mesh=mesh,
+                   model_coeffs=device_model)
     # map indices back to the exact float64 candidate voltages so the
     # selections compare bit-equal against the scalar controller
     selected = cand_v64[out["selected_idx"]]
@@ -323,4 +368,6 @@ def run_batched(wb: WorkloadBatch, phases: np.ndarray, coef_lo, coef_hi,
                                  out["dram_power_savings_pct"],
                                  out["dram_energy_savings_pct"],
                                  out["system_energy_savings_pct"],
-                                 out["perf_per_watt_gain_pct"])
+                                 out["perf_per_watt_gain_pct"],
+                                 base_component_j=out["base_component_j"],
+                                 pt_component_j=out["pt_component_j"])

@@ -45,6 +45,7 @@ import dataclasses
 
 import numpy as np
 
+from repro import power as power_lib
 from repro.dram import circuit, errors
 from repro.engine import controller
 from repro.engine import solve as engine_solve
@@ -68,6 +69,16 @@ class FleetTables:
     hammer_margin: np.ndarray   # [D, K] worst-cell threshold / exposure;
     #                             NaN where min-latency already excluded
     hammer_window_ms: float = errors.HAMMER_WINDOW_MS
+    # per-DIMM device-model name ([D]; repro.power registry) — the
+    # heterogeneous-fleet column.  Defaults to ddr3l on every DIMM.
+    device_models: tuple = ()
+
+    def __post_init__(self):
+        if not self.device_models:
+            object.__setattr__(self, "device_models",
+                               ("ddr3l",) * len(self.modules))
+        elif len(self.device_models) != len(self.modules):
+            raise ValueError("device_models must name one model per DIMM")
 
     @property
     def n_dimms(self) -> int:
@@ -87,14 +98,28 @@ class FleetTables:
             tuple(self.vendors[i] for i in idx),
             self.cand_v, self.timings[idx], self.valid[idx],
             self.lat_feat[idx], self.hammer_margin[idx],
-            self.hammer_window_ms)
+            self.hammer_window_ms,
+            tuple(self.device_models[i] for i in idx))
+
+    def with_device_models(self, models) -> "FleetTables":
+        """A copy assigning device models per DIMM: ``models`` is a
+        ``{module: name}`` mapping (unlisted DIMMs keep their model) or a
+        full [D] sequence of registered model names."""
+        if isinstance(models, dict):
+            assigned = tuple(models.get(m, cur) for m, cur
+                             in zip(self.modules, self.device_models))
+        else:
+            assigned = tuple(models)
+        for name in assigned:
+            power_lib.get(name)          # fail fast on unknown models
+        return dataclasses.replace(self, device_models=assigned)
 
 
 def build_tables(grid: DimmGrid, cand_v, *, step: float = 2.5,
                  max_latency: float = 20.0, temp_c: float = 20.0,
                  mesh=None, dispatch: str = "auto",
                  hammer_window_ms: float = errors.HAMMER_WINDOW_MS,
-                 hammer_scale=None) -> FleetTables:
+                 hammer_scale=None, device_models=None) -> FleetTables:
     """Derive every DIMM's safe candidate table in one batched call.
 
     ``cand_v`` must be ascending with the nominal fallback last.  For each
@@ -116,6 +141,10 @@ def build_tables(grid: DimmGrid, cand_v, *, step: float = 2.5,
     min-latency already excluded).  ``hammer_scale`` — an optional
     ``{module: factor}`` threshold multiplier — is the failure-injection
     knob for degraded parts (tests skew one DIMM below the window).
+
+    ``device_models``: optional ``{module: name}`` / [D] sequence of
+    :mod:`repro.power` model names assigning a power model per DIMM (the
+    heterogeneous-fleet column; default ``ddr3l`` everywhere).
     """
     cand_v = np.atleast_1d(np.asarray(cand_v, np.float64))
     if cand_v.size < 2 or not (np.diff(cand_v) > 0).all():
@@ -152,8 +181,11 @@ def build_tables(grid: DimmGrid, cand_v, *, step: float = 2.5,
             "controller needs a valid fallback on every DIMM")
     timings = np.where(valid[..., None], timings, np.nan)
     lat_feat = timings[:, :-1, 1] + timings[:, :-1, 2]    # [D, K-1]
-    return FleetTables(grid.modules, grid.vendors, cand_v, timings, valid,
-                       lat_feat, hammer_margin, float(hammer_window_ms))
+    tables = FleetTables(grid.modules, grid.vendors, cand_v, timings, valid,
+                         lat_feat, hammer_margin, float(hammer_window_ms))
+    if device_models is not None:
+        tables = tables.with_device_models(device_models)
+    return tables
 
 
 @dataclasses.dataclass(frozen=True)
@@ -172,6 +204,12 @@ class FleetBatchResult:
     system_energy_savings_pct: np.ndarray
     perf_per_watt_gain_pct: np.ndarray
     hammer_margin: np.ndarray | None = None   # [D, K] per-candidate margin
+    # per-component DRAM energy (J) summed over intervals, [W, D, NC] in
+    # repro.power.COMPONENTS order — the Fig. 15-17 analogue axis; base is
+    # the same lane at nominal.  None on legacy constructions.
+    base_component_j: np.ndarray | None = None
+    pt_component_j: np.ndarray | None = None
+    device_models: tuple = ()                 # [D] power-model names
 
     @property
     def n_workloads(self) -> int:
@@ -211,6 +249,31 @@ class FleetBatchResult:
             x = x[np.isfinite(x)]
             out[vendor] = {"mean": float(x.mean()), "min": float(x.min()),
                            "p50": float(np.median(x)), "max": float(x.max())}
+        return out
+
+    def vendor_component_energy(self) -> dict:
+        """Per-vendor, per-component DRAM energy — the Fig. 15-17 analogue
+        fleet-resolved: vendor -> component -> {base_j, pt_j, savings_pct},
+        each a mean over that vendor's (workload, DIMM) lanes.  ``base`` is
+        the same lane run at nominal, so ``savings_pct`` shows which
+        component (array vs periph, static vs dynamic) the reduced-voltage
+        savings come from."""
+        if self.pt_component_j is None:
+            raise ValueError("this result carries no component breakdown "
+                             "(built before the per-component power axis)")
+        out = {}
+        for vendor in sorted(set(self.vendors)):
+            cols = [i for i, vd in enumerate(self.vendors) if vd == vendor]
+            base = self.base_component_j[:, cols].reshape(-1, len(
+                power_lib.COMPONENTS))                       # [W*Dv, NC]
+            pt = self.pt_component_j[:, cols].reshape(-1, len(
+                power_lib.COMPONENTS))
+            bm, pm = base.mean(axis=0), pt.mean(axis=0)
+            out[vendor] = {
+                name: {"base_j": float(bm[i]), "pt_j": float(pm[i]),
+                       "savings_pct": float(100.0 * (1.0 - pm[i] / bm[i]))
+                       if bm[i] else 0.0}
+                for i, name in enumerate(power_lib.COMPONENTS)}
         return out
 
 
@@ -255,10 +318,14 @@ def run_fleet_batched(wb: WorkloadBatch, tables: FleetTables,
     cand_t = {"t_rcd": tile_d(tables.timings[:, :, 0]),
               "t_rp": tile_d(tables.timings[:, :, 1]),
               "t_ras": tile_d(tables.timings[:, :, 2])}
+    # heterogeneous power models: one eager [D, NCOEFF] gather, tiled per
+    # workload — the coefficients are just more per-lane columns in jit.
+    coeff_lanes = tile_d(power_lib.coeff_rows(tables.device_models,
+                                              np.float32))
     out = controller.run_flat(
         "fleet", flat_feats, phases_flat, coef_lo, coef_hi, target_loss_pct,
         tables.cand_v, tile_d(tables.lat_feat), cand_t, tile_d(tables.valid),
-        impl=impl, dispatch=dispatch, mesh=mesh,
+        model_coeffs=coeff_lanes, impl=impl, dispatch=dispatch, mesh=mesh,
         max_elements_resident=max_elements_resident)
     selected = np.asarray(tables.cand_v, np.float64)[out["selected_idx"]]
     shape2 = lambda a: a.reshape(w, d)
@@ -270,4 +337,8 @@ def run_fleet_batched(wb: WorkloadBatch, tables: FleetTables,
         shape2(out["dram_energy_savings_pct"]),
         shape2(out["system_energy_savings_pct"]),
         shape2(out["perf_per_watt_gain_pct"]),
-        np.asarray(tables.hammer_margin))
+        np.asarray(tables.hammer_margin),
+        base_component_j=np.asarray(out["base_component_j"]).reshape(
+            w, d, -1),
+        pt_component_j=np.asarray(out["pt_component_j"]).reshape(w, d, -1),
+        device_models=tables.device_models)

@@ -74,6 +74,7 @@ import jax
 import numpy as np
 from jax.experimental import enable_x64
 
+from repro import power as power_lib
 from repro.engine import controller
 from repro.engine import dispatch as dispatch_lib
 from repro.engine import fleet as fleet_lib
@@ -147,6 +148,9 @@ class FleetRequest:
     # schedule via voltron.fleet_phase_matrix instead of every DIMM
     # repeating the workload's shared column.
     decorrelate_phases: bool = False
+    # Optional repro.power device-model override for every lane of this
+    # request; None uses each DIMM's installed table model.
+    device_model: str | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -214,6 +218,7 @@ class _TableRow:
     valid: np.ndarray          # [K]
     lat_feat: np.ndarray       # [K-1]
     hammer_margin: np.ndarray  # [K]; NaN where min-latency excluded
+    model: str = "ddr3l"       # repro.power device-model name
 
 
 # --------------------------------------------------------------------------
@@ -271,7 +276,8 @@ class EngineService:
         for i, module in enumerate(tables.modules):
             self._tables[module] = _TableRow(
                 tables.vendors[i], tables.timings[i], tables.valid[i],
-                tables.lat_feat[i], tables.hammer_margin[i])
+                tables.lat_feat[i], tables.hammer_margin[i],
+                tables.device_models[i])
 
     def drop_table(self, module: str) -> None:
         """Drop one DIMM's table mid-stream (failure injection): queued
@@ -591,6 +597,8 @@ class EngineService:
             if name not in self._workloads:
                 raise ServiceError(f"workload {name!r} is not registered "
                                    "with the service")
+        if req.device_model is not None:
+            power_lib.get(req.device_model)  # fail fast on unknown models
         model = self._fleet_model()
         pairs = [(name, self._workloads[name]) for name in req.workloads]
         wb = WorkloadBatch.from_workloads(pairs)
@@ -649,9 +657,14 @@ class EngineService:
                       "t_ras": tile_d(timings[:, :, 2])}
             lat_feat = tile_d(np.stack([r.lat_feat for r in rows]))
             valid = tile_d(np.stack([r.valid for r in rows]))
+            # per-lane power-model coefficients: the request override, or
+            # each DIMM's installed table model, tiled per workload
+            models = [req.device_model or r.model for r in rows]
+            coeff_lanes = tile_d(power_lib.coeff_rows(models, np.float32))
             batched, _ = controller.flat_operands(
                 flat_feats, phases_flat, model.coef_low, model.coef_high,
-                req.target_loss_pct, cand_v, lat_feat, cand_t, valid)
+                req.target_loss_pct, cand_v, lat_feat, cand_t, valid,
+                model_coeffs=coeff_lanes)
             return batched
 
         def post(out):
@@ -662,6 +675,10 @@ class EngineService:
             shape2 = lambda a: a.reshape(w, d)
             vendors = tuple(self._tables[m].vendor if m in self._tables
                             else "?" for m in req.modules)
+            device_models = tuple(
+                req.device_model or (self._tables[m].model
+                                     if m in self._tables else "ddr3l")
+                for m in req.modules)
             k = cand_v.size
             margin = np.stack([
                 np.asarray(self._tables[m].hammer_margin, np.float64)
@@ -675,6 +692,9 @@ class EngineService:
                 shape2(out["dram_energy_savings_pct"]),
                 shape2(out["system_energy_savings_pct"]),
                 shape2(out["perf_per_watt_gain_pct"]),
-                margin)
+                margin,
+                base_component_j=out["base_component_j"].reshape(w, d, -1),
+                pt_component_j=out["pt_component_j"].reshape(w, d, -1),
+                device_models=device_models)
 
         return _Lowered(key, spec, w * d, resolve, post)

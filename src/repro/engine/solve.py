@@ -20,15 +20,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import power as power_lib
 from repro.engine import dispatch as dispatch_lib
 from repro.engine.batch import PointGrid, WorkloadBatch
 from repro.kernels.sweep_solve import ops as sweep_ops
 from repro.memsim.core import CPU_FREQ_GHZ
-from repro.memsim.energy import CONST, V_NOM
+from repro.memsim.energy import CONST
 from repro.memsim.system import INSTR_PER_CORE
 
 CPU_FREQ_HZ = CPU_FREQ_GHZ * 1e9
-N_CPU_CORES = 4      # energy model's core count (hard-coded 4 in energy.py)
+N_CPU_CORES = CONST.n_cores      # = hw.CPU_CORES (one source of truth)
 
 
 def _wb_feats(wb: WorkloadBatch) -> dict:
@@ -69,32 +70,46 @@ def alone_solve(feats: dict, mpki=None, impl: str = "reference") -> jnp.ndarray:
     return out["ipc"].reshape(w, c)
 
 
-def _power_energy(points: dict, acts, reads, total_ipc, runtime_s):
+def _power_energy(points: dict, acts, reads, total_ipc, runtime_s,
+                  coeffs=None):
     """Vectorized ``energy.system_power`` + ``system_energy`` (broadcasts
-    over any leading batch shape)."""
-    sa = (points["v_array"] / V_NOM) ** 2
-    sp = (points["v_periph"] / V_NOM) ** 2
-    dyn = (acts * CONST.e_act_pre_nj * sa
-           + reads * (CONST.e_rw_array_nj * sa + CONST.e_rw_periph_nj * sp))
-    static = (CONST.p_bg_array_w * sa + CONST.p_bg_periph_w * sp
-              * (0.35 + 0.65 * points["freq_ratio"]))
-    cpu_w = (N_CPU_CORES * CONST.p_core_static_w
+    over any leading batch shape) — a thin sum over the per-component
+    device-model breakdown (:func:`repro.power.component_power`).
+
+    ``coeffs`` selects the device model: ``None`` (the default ``ddr3l``),
+    a model's hashable ``coeffs()`` tuple (the jit-static form the grid
+    path uses), or a per-lane ``[..., NCOEFF]`` array riding the batch
+    axis (the heterogeneous-fleet form the controller scan uses).  The
+    stacked ``dram_comp_w`` / ``dram_comp_j`` outputs carry the
+    :data:`repro.power.COMPONENTS` axis last.
+    """
+    comp = power_lib.component_power(
+        points, {"acts_per_ns": acts, "lines_per_ns": reads}, coeffs)
+    dyn, static = power_lib.power_totals(comp)
+    cpu_w = (CONST.n_cores * CONST.p_core_static_w
              + total_ipc * CPU_FREQ_HZ * CONST.e_per_inst_nj * 1e-9)
-    cpu_static_j = N_CPU_CORES * CONST.p_core_static_w * runtime_s
+    cpu_static_j = CONST.n_cores * CONST.p_core_static_w * runtime_s
     cpu_dyn_j = (total_ipc * CPU_FREQ_HZ * runtime_s
                  * CONST.e_per_inst_nj * 1e-9)
     dram_j = (dyn + static) * runtime_s
+    comp_w = jnp.stack([comp[k] for k in power_lib.COMPONENTS], axis=-1)
+    rt = jnp.asarray(runtime_s)[..., None]
     return {"dram_dynamic_w": dyn, "dram_static_w": static,
             "dram_w": dyn + static, "cpu_w": cpu_w,
             "system_w": dyn + static + cpu_w,
             "cpu_j": cpu_static_j + cpu_dyn_j,
             "dram_dynamic_j": dyn * runtime_s,
             "dram_static_j": static * runtime_s, "dram_j": dram_j,
-            "system_j": cpu_static_j + cpu_dyn_j + dram_j}
+            "system_j": cpu_static_j + cpu_dyn_j + dram_j,
+            "dram_comp_w": comp_w, "dram_comp_j": comp_w * rt}
 
 
-def _grid_sim_fn(feats: dict, points: dict, impl: str = "reference") -> dict:
-    """The full [W, P] grid simulation; returns a dict of jnp arrays."""
+def _grid_sim_fn(feats: dict, points: dict, impl: str = "reference",
+                 coeffs: tuple | None = None) -> dict:
+    """The full [W, P] grid simulation; returns a dict of jnp arrays.
+    ``coeffs``: optional device-model coefficient tuple (hashable, rides as
+    a jit-static argument — one model per grid; per-lane mixes go through
+    the controller/fleet path)."""
     w, c = feats["mpki"].shape
     p = points["t_rcd"].shape[0]
     per_core = lambda x: jnp.broadcast_to(x[:, None, :], (w, p, c)) \
@@ -120,7 +135,7 @@ def _grid_sim_fn(feats: dict, points: dict, impl: str = "reference") -> dict:
     pe = _power_energy(grid_points,
                        out["acts_per_ns"].reshape(w, p),
                        out["reads_per_ns"].reshape(w, p),
-                       total_ipc, runtime_s)
+                       total_ipc, runtime_s, coeffs)
     return {"ipc": ipc, "alone_ipc": alone, "ws": ws,
             "stall_frac": out["stall_frac"].reshape(w, p, c),
             "runtime_s": runtime_s,
@@ -128,10 +143,11 @@ def _grid_sim_fn(feats: dict, points: dict, impl: str = "reference") -> dict:
             "bus_utilization": out["utilization"].reshape(w, p), **pe}
 
 
-_grid_sim = jax.jit(_grid_sim_fn, static_argnames=("impl",))
+_grid_sim = jax.jit(_grid_sim_fn, static_argnames=("impl", "coeffs"))
 
 
-def _grid_sim_dispatched(feats: dict, points: dict, impl: str) -> dict:
+def _grid_sim_dispatched(feats: dict, points: dict, impl: str,
+                         coeffs: tuple | None = None) -> dict:
     """``_grid_sim`` through the shape-stable dispatch layer: the W and P
     axes are padded up to canonical buckets so any workload x point grid
     hits a warm AOT executable (the kernel reduces only over the core axis,
@@ -145,8 +161,9 @@ def _grid_sim_dispatched(feats: dict, points: dict, impl: str) -> dict:
     pp = {k: jnp.asarray(dispatch_lib.pad_axis(a, bp))
           for k, a in points.items()}
     r = dispatch_lib.aot_call("grid_sim",
-                              functools.partial(_grid_sim_fn, impl=impl),
-                              (pf, pp), statics_key=(impl,),
+                              functools.partial(_grid_sim_fn, impl=impl,
+                                                coeffs=coeffs),
+                              (pf, pp), statics_key=(impl, coeffs),
                               resident=bw * bp)
     return {k: (a[:w] if k == "alone_ipc" else a[:w, :p])
             for k, a in r.items()}
@@ -166,6 +183,12 @@ class BatchResult:
     bus_utilization: np.ndarray
     power: dict                  # *_w entries, each [W, P]
     energy: dict                 # *_j entries, each [W, P]
+    # per-component DRAM breakdown (repro.power.COMPONENTS keys), each
+    # [W, P]; components_w sums to power["dram_w"], components_j to
+    # energy["dram_j"] (float rounding aside)
+    components_w: dict | None = None
+    components_j: dict | None = None
+    device_model: str = "ddr3l"  # the model the whole grid was run under
 
 
 @dataclasses.dataclass(frozen=True)
@@ -182,29 +205,40 @@ class ComparisonBatch:
 
 
 def simulate_batch(wb: WorkloadBatch, pg: PointGrid, impl: str = "auto",
-                   dispatch: str = "auto") -> BatchResult:
+                   dispatch: str = "auto",
+                   device_model=None) -> BatchResult:
     """Simulate every (workload, operating point) pair in one batched call.
 
     ``dispatch="auto"`` pads W and P to canonical buckets and reuses a warm
     AOT executable per bucket (see :mod:`repro.engine.dispatch`);
     ``"direct"`` keeps the exact-shape jit call (one retrace per new grid
-    shape — the bucketed path's parity reference)."""
+    shape — the bucketed path's parity reference).  ``device_model``
+    (name or :class:`repro.power.DeviceModel`) selects the DRAM power
+    model for the whole grid (default ``ddr3l``)."""
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "reference"
+    model = power_lib.get(device_model if device_model is not None
+                          else "ddr3l")
+    coeffs = None if model is power_lib.DDR3L else model.coeffs()
     if dispatch == "direct":
-        r = _grid_sim(_wb_feats(wb), _pg_points(pg), impl=impl)
+        r = _grid_sim(_wb_feats(wb), _pg_points(pg), impl=impl,
+                      coeffs=coeffs)
     elif dispatch in ("auto", "bucketed"):
-        r = _grid_sim_dispatched(_wb_feats(wb), _pg_points(pg), impl)
+        r = _grid_sim_dispatched(_wb_feats(wb), _pg_points(pg), impl, coeffs)
     else:
         raise ValueError(f"unknown dispatch {dispatch!r}")
     a = {k: np.asarray(v, np.float64) for k, v in r.items()}
+    comp = lambda key: {name: a[key][..., i] for i, name
+                        in enumerate(power_lib.COMPONENTS)}
     return BatchResult(
         wb.names, a["ipc"], a["alone_ipc"], a["ws"], a["stall_frac"],
         a["runtime_s"], a["avg_latency_ns"], a["bus_utilization"],
         power={k: a[k] for k in ("dram_dynamic_w", "dram_static_w", "dram_w",
                                  "cpu_w", "system_w")},
         energy={k: a[k] for k in ("cpu_j", "dram_dynamic_j", "dram_static_j",
-                                  "dram_j", "system_j")})
+                                  "dram_j", "system_j")},
+        components_w=comp("dram_comp_w"), components_j=comp("dram_comp_j"),
+        device_model=model.name)
 
 
 def evaluate_batch(wb: WorkloadBatch, pg: PointGrid,

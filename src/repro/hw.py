@@ -50,6 +50,13 @@ CHIPS_PER_DIMM = 4               # x16 chips (Table 7)
 REFRESH_INTERVAL_MS = 64.0       # DDR3 worst-case retention assumption
 GUARDBAND = 1.38                 # manufacturer latency guardband (Section 6.1)
 
+# Host CPU of the DDR3L system (Table 2): 4x ARM Cortex-A9-class @ 2 GHz.
+# One source of truth — memsim.core, memsim.energy and the engine's
+# vectorized energy math all derive from these (they used to hard-code
+# ``2.0e9`` / ``n_cores=4`` independently).
+CPU_FREQ_GHZ = 2.0
+CPU_CORES = 4
+
 # Standard DDR3L timings in ns (Table 1): tRCD / tRP / tRAS.
 T_RCD_STD = 13.75
 T_RP_STD = 13.75

@@ -23,7 +23,7 @@ from repro.dram.timing import TimingParams
 from repro.memsim import dram_timing
 from repro.memsim.workloads import Benchmark
 
-CPU_FREQ_GHZ = 2.0          # 4x ARM Cortex-A9 @ 2 GHz (Table 2)
+CPU_FREQ_GHZ = hw.CPU_FREQ_GHZ   # 4x ARM Cortex-A9 @ 2 GHz (Table 2)
 ROB_HIDE_CYCLES = 0.0       # latency the OoO window hides *beyond* MLP
 STALL_AMPLIFY = 5.0         # ROB drain+refill penalty per exposed stall
 MLP_SCALE = 0.62            # scales benchmark bank_parallelism into MLP

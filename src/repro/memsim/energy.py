@@ -5,6 +5,15 @@ restoration, precharge, refresh, array static) and the peripheral domain
 (control logic, DLL, I/O: scales with V_peri^2 and channel frequency).
 Voltron reduces only V_array; MemDVFS reduces both V (one rail) and f.
 
+The DRAM arithmetic lives in :mod:`repro.power` — this module is the
+scalar float64 wrapper over the default ``ddr3l`` :class:`~repro.power
+.DeviceModel` (the engine's vectorized path uses the same component
+formula on the flat batch axis), kept as the parity reference the tests
+compare everything against.  ``dram_component_power`` exposes the
+six-component breakdown; ``dram_power`` is its legacy ``(dynamic,
+static)`` grouping and reproduces the pre-refactor totals to float64
+rounding.
+
 CPU energy = static power x time + dynamic energy per instruction — so CPU
 *energy* grows sub-linearly with runtime loss, matching Fig. 15's observed
 +1.7% CPU energy at 2.9% performance loss.
@@ -13,9 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
-
-from repro import hw
+from repro import hw, power
 
 V_NOM = hw.VDD_NOMINAL
 
@@ -28,9 +35,27 @@ class EnergyConstants:
     e_rw_periph_nj: float = 10.0     # per 64B line, periph+I/O portion
     p_bg_array_w: float = 0.33       # background+refresh, array domain
     p_bg_periph_w: float = 0.60      # background (DLL, clocking), periph
-    # ---- CPU (4x Cortex-A9-class @2 GHz) ---------------------------------
+    # ---- CPU (hw.CPU_CORES x Cortex-A9-class @ hw.CPU_FREQ_GHZ) ----------
     p_core_static_w: float = 0.55
     e_per_inst_nj: float = 0.32
+    n_cores: int = hw.CPU_CORES
+    cpu_freq_hz: float = hw.CPU_FREQ_GHZ * 1e9
+
+    def device_model(self) -> power.DeviceModel:
+        """The DRAM half of these constants as a device model (the default
+        constants resolve to the registered ``ddr3l`` instance, so table
+        code comparing by name sees the canonical model)."""
+        d = power.DDR3L
+        if all(getattr(self, f) == getattr(d, f) for f in
+               ("e_act_pre_nj", "e_rw_array_nj", "e_rw_periph_nj",
+                "p_bg_array_w", "p_bg_periph_w")):
+            return d
+        return dataclasses.replace(
+            d, name="custom", e_act_pre_nj=self.e_act_pre_nj,
+            e_rw_array_nj=self.e_rw_array_nj,
+            e_rw_periph_nj=self.e_rw_periph_nj,
+            p_bg_array_w=self.p_bg_array_w,
+            p_bg_periph_w=self.p_bg_periph_w)
 
 
 CONST = EnergyConstants()
@@ -51,26 +76,40 @@ class PowerBreakdown:
         return self.dram_w + self.cpu_w
 
 
+def dram_component_power(v_array: float, v_periph: float, freq_ratio: float,
+                         acts_per_ns: float, lines_per_ns: float,
+                         c: EnergyConstants = CONST,
+                         device=None) -> dict:
+    """Per-component DRAM power (W) — :data:`repro.power.COMPONENTS` keyed,
+    scalar float64.  ``device`` overrides the model (a
+    :class:`repro.power.DeviceModel` or registered name); default is the
+    ``ddr3l`` model carrying ``c``'s coefficients."""
+    model = power.get(device) if device is not None else c.device_model()
+    comp = power.component_power(
+        {"v_array": v_array, "v_periph": v_periph, "freq_ratio": freq_ratio},
+        {"acts_per_ns": acts_per_ns, "lines_per_ns": lines_per_ns}, model)
+    return {k: float(v) for k, v in comp.items()}
+
+
 def dram_power(v_array: float, v_periph: float, freq_ratio: float,
                acts_per_ns: float, lines_per_ns: float,
                c: EnergyConstants = CONST) -> tuple:
-    """(dynamic W, static W) for the DRAM subsystem.
+    """(dynamic W, static W) for the DRAM subsystem — the legacy grouping
+    of the component breakdown (``power_totals``).
 
     ``freq_ratio``: channel frequency relative to 1600 MT/s (MemDVFS lowers
     it; Voltron keeps it at 1.0).  Power ~ V^2 * f for the periph domain and
     ~ V_array^2 for the asynchronous array operations (Section 2.3).
     """
-    sa = (v_array / V_NOM) ** 2
-    sp = (v_periph / V_NOM) ** 2
-    dyn = (acts_per_ns * c.e_act_pre_nj * sa
-           + lines_per_ns * (c.e_rw_array_nj * sa + c.e_rw_periph_nj * sp))
-    static = c.p_bg_array_w * sa + c.p_bg_periph_w * sp * (0.35 + 0.65 * freq_ratio)
+    dyn, static = power.power_totals(dram_component_power(
+        v_array, v_periph, freq_ratio, acts_per_ns, lines_per_ns, c))
     return float(dyn), float(static)
 
 
 def cpu_power(total_ipc: float, c: EnergyConstants = CONST,
-              n_cores: int = 4) -> float:
-    inst_per_s = total_ipc * 2.0e9            # 2 GHz
+              n_cores: int | None = None) -> float:
+    n_cores = c.n_cores if n_cores is None else n_cores
+    inst_per_s = total_ipc * c.cpu_freq_hz
     return n_cores * c.p_core_static_w + inst_per_s * c.e_per_inst_nj * 1e-9
 
 
@@ -91,8 +130,8 @@ def system_energy(v_array: float, v_periph: float, freq_ratio: float,
     and DRAM power follow wall time."""
     dyn, stat = dram_power(v_array, v_periph, freq_ratio, acts_per_ns,
                            lines_per_ns, c)
-    n_inst = total_ipc * 2.0e9 * runtime_s
-    cpu_static_j = 4 * c.p_core_static_w * runtime_s
+    n_inst = total_ipc * c.cpu_freq_hz * runtime_s
+    cpu_static_j = c.n_cores * c.p_core_static_w * runtime_s
     cpu_dyn_j = n_inst * c.e_per_inst_nj * 1e-9
     dram_j = (dyn + stat) * runtime_s
     return {"cpu": cpu_static_j + cpu_dyn_j,

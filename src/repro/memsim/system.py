@@ -103,7 +103,8 @@ def simulate_scalar(cores: tuple, op: OperatingPoint = NOMINAL) -> SimResult:
     alone = np.array([_alone_ipc_nominal(b) for b in cores])
     ws = core_model.weighted_speedup(res.ipc, alone)
     # fixed work: every core runs INSTR_PER_CORE; runtime set by the slowest
-    runtime_s = float(np.max(INSTR_PER_CORE / (res.ipc * 2.0e9)))
+    runtime_s = float(np.max(INSTR_PER_CORE
+                             / (res.ipc * hw.CPU_FREQ_GHZ * 1e9)))
     total_ipc = float(np.sum(res.ipc))
     pw = energy.system_power(op.v_array, op.v_periph, op.freq_ratio,
                              res.acts_per_ns, res.reads_per_ns, total_ipc)
@@ -205,8 +206,9 @@ def voltron_point(v_array: float, fast_bank_frac: float = 0.0) -> OperatingPoint
 
 def memdvfs_point(data_rate_mts: float) -> OperatingPoint:
     """MemDVFS [32]: one rail, voltage tied to frequency, latencies (ns)
-    unchanged."""
-    rail = {1600.0: 1.35, 1333.0: 1.30, 1066.0: 1.25}[float(data_rate_mts)]
+    unchanged.  The V-f ladder lives on the DDR3L device model."""
+    from repro import power
+    rail = power.DDR3L.rail_for_rate(data_rate_mts)
     return OperatingPoint(v_array=rail, v_periph=rail,
                           data_rate_mts=data_rate_mts,
                           timing=TimingParams())   # standard ns latencies

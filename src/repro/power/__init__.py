@@ -1,0 +1,26 @@
+"""Per-component DRAM power subsystem with pluggable device models.
+
+This package is the single home of the V^2 power arithmetic that used to
+be re-derived independently in ``memsim/energy.py``, ``engine/solve.py``,
+``core/hbm_adapter.py`` and ``core/memdvfs.py``.  See
+:mod:`repro.power.model` for the component decomposition and the
+flat-batch vectorization contract, and :mod:`repro.power.devices` for the
+built-in part classes (``ddr3l`` — the legacy parity reference — plus
+``hbm2`` and ``lpddr4`` for heterogeneous fleets).
+"""
+from repro.power.model import (  # noqa: F401
+    ARRAY_COMPONENTS,
+    COEFF_FIELDS,
+    COMPONENTS,
+    PERIPH_COMPONENTS,
+    DeviceModel,
+    coeff_rows,
+    component_energy,
+    component_power,
+    get,
+    power_totals,
+    register,
+    registered,
+)
+from repro.power import devices  # noqa: F401  (populates the registry)
+from repro.power.devices import DDR3L, HBM2, LPDDR4  # noqa: F401

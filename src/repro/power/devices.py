@@ -1,0 +1,64 @@
+"""Built-in device models.
+
+``DDR3L`` carries the exact coefficients of the legacy
+``memsim.energy.EnergyConstants`` DRAM fields — it *is* the scalar parity
+reference — plus the MemDVFS V-f ladder previously hard-coded in
+``memsim.system.memdvfs_point``.  ``HBM2`` and ``LPDDR4`` are
+engineering-estimate part classes for heterogeneous fleets: same nominal
+rails (so the shared Algorithm-1 candidate ladder applies per lane),
+different component weights — HBM spends relatively more in the periph/IO
+and refresh terms (many stacked banks, TSV I/O), LPDDR less background
+power and cheaper I/O (short on-package wires).
+"""
+from __future__ import annotations
+
+from repro import hw
+from repro.power.model import DeviceModel, register
+
+DDR3L = register(DeviceModel(
+    name="ddr3l",
+    rails=("v_array", "v_periph"),
+    v_nom_array=hw.VDD_NOMINAL,
+    v_nom_periph=hw.VDD_NOMINAL,
+    e_act_pre_nj=30.0,
+    e_rw_array_nj=5.0,
+    e_rw_periph_nj=10.0,
+    p_bg_array_w=0.33,
+    p_bg_periph_w=0.60,
+    refresh_frac=0.18,
+    bg_freq_floor=0.35,
+    bg_freq_slope=0.65,
+    dvfs_rails=((1600.0, 1.35), (1333.0, 1.30), (1066.0, 1.25)),
+))
+
+HBM2 = register(DeviceModel(
+    name="hbm2",
+    rails=("v_array", "v_periph"),
+    v_nom_array=hw.VDD_NOMINAL,
+    v_nom_periph=hw.VDD_NOMINAL,
+    e_act_pre_nj=24.0,        # smaller pages per pseudo-channel
+    e_rw_array_nj=4.0,
+    e_rw_periph_nj=6.0,       # TSV I/O is cheap per bit...
+    p_bg_array_w=0.55,        # ...but 8 stacked dies burn background
+    p_bg_periph_w=0.80,
+    refresh_frac=0.30,        # dense stack -> refresh-heavy
+    bg_freq_floor=0.40,
+    bg_freq_slope=0.60,
+))
+
+LPDDR4 = register(DeviceModel(
+    name="lpddr4",
+    rails=("v_array", "v_periph"),
+    v_nom_array=hw.VDD_NOMINAL,
+    v_nom_periph=hw.VDD_NOMINAL,
+    e_act_pre_nj=22.0,
+    e_rw_array_nj=4.5,
+    e_rw_periph_nj=5.0,       # on-package wires, no DIMM bus
+    p_bg_array_w=0.20,        # aggressive power-down states
+    p_bg_periph_w=0.25,       # no DLL
+    refresh_frac=0.35,        # all-bank refresh dominates background
+    bg_freq_floor=0.25,
+    bg_freq_slope=0.75,
+))
+
+DEFAULT = DDR3L

@@ -1,0 +1,239 @@
+"""The device-model interface and the per-component power formula.
+
+A :class:`DeviceModel` describes one memory part class (DDR3L DIMM, HBM
+stack, LPDDR package, ...) as a named set of voltage rails plus the
+coefficients of the six-component DRAMPower-style decomposition the paper
+uses in Section 6.1:
+
+====================  =======  ==============================================
+component             domain   power term
+====================  =======  ==============================================
+``background_array``  array    ``(1 - refresh_frac) * p_bg_array_w * sa``
+``refresh``           array    ``refresh_frac * p_bg_array_w * sa``
+``act_pre``           array    ``acts_per_ns * e_act_pre_nj * sa``
+``rw_array``          array    ``lines_per_ns * e_rw_array_nj * sa``
+``background_periph`` periph   ``p_bg_periph_w * sp * (f0 + f1 * freq_ratio)``
+``rw_periph``         periph   ``lines_per_ns * e_rw_periph_nj * sp``
+====================  =======  ==============================================
+
+with ``sa = (v_array / v_nom_array)**2`` and ``sp = (v_periph /
+v_nom_periph)**2`` (Section 2.3: array operations are asynchronous and
+scale with the array rail alone; the peripheral/IO domain scales with its
+rail and the channel frequency).  Row-buffer locality is the coupling
+variable between the two dynamic activity rates: ``acts_per_ns =
+lines_per_ns * (1 - row_hit_rate)`` upstream, so a hit-rate change moves
+energy between ``act_pre`` and the read/write components.
+
+The array-domain components sum to the legacy ``memsim.energy.dram_power``
+dynamic+static split exactly (same coefficients, regrouped), which is what
+makes the refactor behavior-preserving: *totals* are unchanged to float64
+tolerance, the component axis is purely additive reporting.
+
+Vectorization contract
+======================
+
+:func:`component_power` is written with plain arithmetic operators only —
+no ``jnp`` / ``np`` calls — so the same function serves
+ the scalar float64 parity path (``memsim.energy``, python floats in/out)
+and the engine's jit-compiled flat batch axis (``jnp`` arrays in/out,
+any leading batch shape).  Heterogeneous fleets resolve their per-lane
+coefficients **eagerly at table construction** (:func:`coeff_rows` gathers
+one ``[N, NCOEFF]`` float row per lane from the registry), so inside jit
+there is no model dispatch at all — the coefficients are just six more
+per-lane columns riding the flat batch axis, exactly like the candidate
+timing tables (see the engine package docstring).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro import hw
+
+#: Component names, fixed order — the trailing axis of every stacked
+#: ``[..., NC]`` component array produced by the engine.
+COMPONENTS = ("background_array", "refresh", "act_pre", "rw_array",
+              "background_periph", "rw_periph")
+
+#: Domain split (Section 2.3): array components scale with V_array**2,
+#: peripheral components with V_periph**2 (and frequency).
+ARRAY_COMPONENTS = ("background_array", "refresh", "act_pre", "rw_array")
+PERIPH_COMPONENTS = ("background_periph", "rw_periph")
+
+#: Coefficient-vector field order for the flat-batch representation
+#: (:func:`coeff_rows`); must stay in sync with :func:`component_power`.
+COEFF_FIELDS = ("v_nom_array", "v_nom_periph", "e_act_pre_nj",
+                "e_rw_array_nj", "e_rw_periph_nj", "p_bg_array_w",
+                "p_bg_periph_w", "refresh_frac", "bg_freq_floor",
+                "bg_freq_slope")
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceModel:
+    """One memory part class: rails + per-component coefficients + timing
+    coupling.  Frozen and hashable, so a model can ride a jit static
+    argument; per-lane heterogeneity goes through :func:`coeff_rows`
+    instead (eager gather, no Python in jit)."""
+
+    name: str
+    rails: tuple                     # rail names, e.g. ("v_array", "v_periph")
+    v_nom_array: float = hw.VDD_NOMINAL
+    v_nom_periph: float = hw.VDD_NOMINAL
+    e_act_pre_nj: float = 30.0       # ACT+PRE pair energy (array domain)
+    e_rw_array_nj: float = 5.0       # per 64B line, array portion
+    e_rw_periph_nj: float = 10.0     # per 64B line, periph+I/O portion
+    p_bg_array_w: float = 0.33       # background+refresh, array domain
+    p_bg_periph_w: float = 0.60      # background (DLL, clocking), periph
+    refresh_frac: float = 0.18       # share of array background spent on
+    #                                  refresh (DRAMPower-style split)
+    bg_freq_floor: float = 0.35      # freq-independent periph background
+    bg_freq_slope: float = 0.65      # freq-proportional periph background
+    # Optional V-f coupling for DVFS-style parts: ((rate_mts, rail_v), ...)
+    # descending; empty for parts whose interface frequency is fixed.
+    dvfs_rails: tuple = ()
+
+    def coeffs(self) -> tuple:
+        """The coefficient vector in :data:`COEFF_FIELDS` order."""
+        return tuple(float(getattr(self, f)) for f in COEFF_FIELDS)
+
+    # -- timing coupling ---------------------------------------------------
+    def timing_scale(self, v_array) -> float:
+        """Array-operation latency at ``v_array`` relative to nominal (the
+        calibrated alpha-power law of the circuit model, Section 5.1).  At
+        a fixed interface frequency this is also the inverse effective-
+        bandwidth derate (``core.hbm_adapter`` inverts it)."""
+        from repro.dram import circuit
+        base = float(np.asarray(circuit.raw_latency("rcd",
+                                                    self.v_nom_array)))
+        slow = float(np.asarray(circuit.raw_latency("rcd", v_array)))
+        return slow / base
+
+    def energy_scale(self, v_rel: float) -> float:
+        """Relative energy per unit activity with every rail tied to
+        ``v_rel`` x nominal.  All six components scale with the square of
+        their rail, so the tied-rail closed form is exactly ``v_rel**2``
+        (kept closed-form so callers stay bit-compatible with the legacy
+        V**2 arithmetic they replaced)."""
+        return float(v_rel) ** 2
+
+    def rail_for_rate(self, rate_mts: float) -> float:
+        """DVFS V-f coupling: the rail voltage tied to an interface rate
+        (MemDVFS lowers both together; Section 2.4)."""
+        for rate, rail in self.dvfs_rails:
+            if float(rate) == float(rate_mts):
+                return rail
+        raise ValueError(f"{self.name} has no DVFS rail for "
+                         f"{rate_mts} MT/s (ladder: "
+                         f"{tuple(r for r, _ in self.dvfs_rails)})")
+
+    # -- energy ------------------------------------------------------------
+    def component_power(self, points: dict, activity: dict) -> dict:
+        return component_power(points, activity, self)
+
+    def dram_power(self, points: dict, activity: dict) -> tuple:
+        """Legacy ``(dynamic W, static W)`` totals — the component sums."""
+        return power_totals(self.component_power(points, activity))
+
+
+def _coeff_dict(coeffs) -> dict:
+    """Normalize ``coeffs`` to a field -> scalar/array mapping.
+
+    ``None`` -> the default DDR3L model; a :class:`DeviceModel` (or its
+    name, or its hashable ``coeffs()`` tuple — the jit-static form) ->
+    scalar coefficients; an ``[..., NCOEFF]`` array (numpy or jnp) ->
+    per-lane coefficient columns (the heterogeneous flat-batch form)."""
+    if coeffs is None:
+        from repro.power import devices
+        coeffs = devices.DDR3L
+    if isinstance(coeffs, str):
+        coeffs = get(coeffs)
+    if isinstance(coeffs, DeviceModel):
+        return dict(zip(COEFF_FIELDS, coeffs.coeffs()))
+    if isinstance(coeffs, tuple):
+        return dict(zip(COEFF_FIELDS, coeffs))
+    if isinstance(coeffs, dict):
+        return coeffs
+    return {f: coeffs[..., i] for i, f in enumerate(COEFF_FIELDS)}
+
+
+def component_power(points: dict, activity: dict, coeffs=None) -> dict:
+    """Per-component power (W), vectorized over any batch shape.
+
+    ``points``: ``v_array`` / ``v_periph`` / ``freq_ratio`` (scalars or
+    arrays, one value per lane).  ``activity``: ``acts_per_ns`` (row
+    activations) and ``lines_per_ns`` (64B line transfers) — the row-buffer
+    locality coupling.  ``coeffs``: see :func:`_coeff_dict`.
+
+    Only plain operators are used, so python floats, numpy and jnp arrays
+    all flow through unchanged (the scalar path stays float64, the engine
+    path stays jit-traceable).
+    """
+    c = _coeff_dict(coeffs)
+    sa = (points["v_array"] / c["v_nom_array"]) ** 2
+    sp = (points["v_periph"] / c["v_nom_periph"]) ** 2
+    acts = activity["acts_per_ns"]
+    lines = activity["lines_per_ns"]
+    return {
+        "background_array": (1.0 - c["refresh_frac"]) * c["p_bg_array_w"] * sa,
+        "refresh": c["refresh_frac"] * c["p_bg_array_w"] * sa,
+        "act_pre": acts * c["e_act_pre_nj"] * sa,
+        "rw_array": lines * c["e_rw_array_nj"] * sa,
+        "background_periph": c["p_bg_periph_w"] * sp
+        * (c["bg_freq_floor"] + c["bg_freq_slope"] * points["freq_ratio"]),
+        "rw_periph": lines * c["e_rw_periph_nj"] * sp,
+    }
+
+
+def component_energy(points: dict, activity: dict, runtime_s,
+                     coeffs=None) -> dict:
+    """Per-component energy (J) over ``runtime_s`` of wall time."""
+    return {k: v * runtime_s
+            for k, v in component_power(points, activity, coeffs).items()}
+
+
+def power_totals(comp: dict) -> tuple:
+    """``(dynamic W, static W)`` from a component dict — the exact grouping
+    of the legacy ``memsim.energy.dram_power`` return value."""
+    dyn = comp["act_pre"] + comp["rw_array"] + comp["rw_periph"]
+    static = (comp["background_array"] + comp["refresh"]
+              + comp["background_periph"])
+    return dyn, static
+
+
+# --------------------------------------------------------------------------
+# Registry: named models -> per-lane coefficient rows on the flat batch axis
+# --------------------------------------------------------------------------
+_REGISTRY: dict = {}
+
+
+def register(model: DeviceModel) -> DeviceModel:
+    """Register a model under its name (last registration wins, so tests
+    can override); returns the model for assignment convenience."""
+    if not isinstance(model, DeviceModel):
+        raise TypeError(f"expected a DeviceModel, got {type(model).__name__}")
+    _REGISTRY[model.name] = model
+    return model
+
+
+def get(name_or_model) -> DeviceModel:
+    """Resolve a model name (or pass a model through)."""
+    if isinstance(name_or_model, DeviceModel):
+        return name_or_model
+    model = _REGISTRY.get(name_or_model)
+    if model is None:
+        raise KeyError(f"unknown device model {name_or_model!r} "
+                       f"(registered: {tuple(_REGISTRY)})")
+    return model
+
+
+def registered() -> tuple:
+    return tuple(_REGISTRY)
+
+
+def coeff_rows(names_or_models, dtype=np.float64) -> np.ndarray:
+    """``[N, NCOEFF]`` coefficient rows for a sequence of models — the
+    eager per-lane gather that puts heterogeneous device models on the
+    flat batch axis (one row per lane, no model dispatch inside jit)."""
+    rows = [get(m).coeffs() for m in names_or_models]
+    return np.asarray(rows, dtype)
