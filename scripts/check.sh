@@ -56,5 +56,13 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.serve_bench artifacts/BENCH_serve.json
 
+# measured kernel autotune smoke: roofline-pruned config search at the
+# smoke shapes, winners persisted to artifacts/tuning/, then the reload
+# acceptance — tuned config loaded back from disk, warm second run with
+# no retrace, config label visible in dispatch.stats() (exits nonzero on
+# any parity or round-trip failure)
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.kernel_bench artifacts/BENCH_kernel.json
+
 # steady-state throughput gate vs the committed baselines (>30% fails)
 python scripts/bench_gate.py artifacts benchmarks/baselines

@@ -141,7 +141,13 @@ def stats(entry: str | None = None) -> dict:
     ``dispatch_us_total`` and ``dispatch_us_last`` (blocking wall time of
     the compiled executions, cumulative and most-recent — compile time is
     excluded, so reuse *and* steady latency are separately inspectable).
-    Gauges attached via :func:`record_gauge` (e.g. the serving front-end's
+    Entries whose callers pass ``config_label`` (the engine paths that
+    resolve an ``autotune.KernelConfig`` per dispatch) additionally report
+    ``config_last`` (the label of the most recent call) and
+    ``kernel_configs`` (every distinct label this entry has compiled
+    against — the label also rides the caller's ``statics_key``, so each
+    listed config corresponds to its own cached executable).  Gauges
+    attached via :func:`record_gauge` (e.g. the serving front-end's
     queue depth) appear alongside the counters."""
     with _LOCK:
         if entry is not None:
@@ -173,7 +179,8 @@ def clear_cache() -> None:
 
 
 def aot_call(entry: str, fn, args: tuple, *, statics_key=(),
-             donate: bool = False, resident: int | None = None):
+             donate: bool = False, resident: int | None = None,
+             config_label: str | None = None):
     """Run ``fn(*args)`` through the AOT executable cache.
 
     ``fn`` must be jit-able with every static already closed over;
@@ -181,6 +188,11 @@ def aot_call(entry: str, fn, args: tuple, *, statics_key=(),
     differs at equal arg shapes.  The cache key is (entry, statics_key,
     arg treedef, every leaf's shape/dtype, x64 flag, donation) — exactly
     the trace key, so ``stats(entry)["compiles"]`` counts real retraces.
+
+    ``config_label`` is observability only: callers that resolve a tuned
+    kernel config per dispatch pass its label here so ``stats(entry)``
+    reports which config each executable compiled against (the config must
+    *also* ride ``statics_key`` — it changes the traced program).
     """
     flat, treedef = jax.tree.flatten(args)
     key = (entry, tuple(statics_key), treedef,
@@ -191,6 +203,11 @@ def aot_call(entry: str, fn, args: tuple, *, statics_key=(),
         s["calls"] += 1
         if resident:
             s["max_resident"] = max(s["max_resident"], int(resident))
+        if config_label is not None:
+            s["config_last"] = config_label
+            seen = s.setdefault("kernel_configs", ())
+            if config_label not in seen:
+                s["kernel_configs"] = seen + (config_label,)
         compiled = _EXECUTABLES.get(key)
         key_lock = _KEY_LOCKS.setdefault(key, threading.Lock())
     if compiled is None:
@@ -250,7 +267,8 @@ def _chunk_fn(kernel, n_batched: int):
 def dispatch_flat(entry: str, kernel, batched, replicated=(), *,
                   statics_key=(), mesh=None, element_cost: int = 1,
                   config: DispatchConfig | None = None,
-                  mode: str = "auto") -> dict:
+                  mode: str = "auto",
+                  config_label: str | None = None) -> dict:
     """Dispatch one flat-batch kernel call shape-stably.
 
     ``kernel(*batched, *replicated, valid)`` maps the leading (flat batch)
@@ -270,6 +288,8 @@ def dispatch_flat(entry: str, kernel, batched, replicated=(), *,
     are mesh-divisible by construction.
 
     ``mode``: "auto" (bucket, chunk on overflow), "bucketed", "chunked".
+    ``config_label`` is forwarded to :func:`aot_call` for stats reporting
+    of the caller's resolved kernel-tuning config (see that docstring).
     """
     cfg = config or DispatchConfig()
     mesh = mesh_lib.make_batch_mesh() if mesh is None else mesh
@@ -303,7 +323,8 @@ def dispatch_flat(entry: str, kernel, batched, replicated=(), *,
                 for a in args)
         rep = _replicate(replicated, mesh, n_devices)
         out = aot_call(entry, kernel, args[:-1] + rep + args[-1:],
-                       statics_key=statics_key, resident=resident)
+                       statics_key=statics_key, resident=resident,
+                       config_label=config_label)
         out = {k: np.asarray(v)[:n] for k, v in out.items()}
         return out
 
@@ -325,7 +346,7 @@ def dispatch_flat(entry: str, kernel, batched, replicated=(), *,
         _stats_entry(entry)["chunked_calls"] += 1
     out = aot_call(entry + "/chunked", _chunk_fn(kernel, len(stacked)),
                    stacked + (valid,) + rep, statics_key=statics_key,
-                   donate=True, resident=chunk)
+                   donate=True, resident=chunk, config_label=config_label)
     return {key: np.asarray(v).reshape((k * chunk,) + v.shape[2:])[:n]
             for key, v in out.items()}
 

@@ -182,7 +182,11 @@ class ServiceConfig:
 # --------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class _GroupSpec:
-    """Everything a flush needs that is shared by the whole group."""
+    """Everything a flush needs that is shared by the whole group.
+
+    ``config_label`` carries the resolved kernel-tuning config label (when
+    the lowering consulted ``autotune.active_config``) so the dispatch
+    stats row reports it; the config itself rides ``statics_key``."""
 
     entry: str
     kernel: object
@@ -190,6 +194,7 @@ class _GroupSpec:
     statics_key: tuple
     element_cost: int
     x64: bool
+    config_label: str | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -467,7 +472,8 @@ class EngineService:
             return dispatch_lib.dispatch_flat(
                 spec.entry, spec.kernel, batched, spec.replicated,
                 statics_key=spec.statics_key, mesh=self._mesh,
-                element_cost=spec.element_cost, config=cfg, mode=mode)
+                element_cost=spec.element_cost, config=cfg, mode=mode,
+                config_label=spec.config_label)
 
         if spec.x64:
             with enable_x64():
@@ -622,14 +628,20 @@ class EngineService:
         c = wb.mpki.shape[1]
         coef_lo32 = np.asarray(model.coef_low, np.float32)
         coef_hi32 = np.asarray(model.coef_high, np.float32)
+        # the tuned solve config participates in the coalescing key: lanes
+        # compiled against different configs must not share an executable
+        from repro.kernels import autotune
+        solve_cfg = autotune.active_config("sweep_solve", (w * d, c))
         key = ("fleet", impl, t, c, float(req.target_loss_pct),
-               coef_lo32.tobytes(), coef_hi32.tobytes(), cand_bytes)
+               coef_lo32.tobytes(), coef_hi32.tobytes(), cand_bytes,
+               solve_cfg.key())
         spec = _GroupSpec(
             "fleet", functools.partial(controller._controller_flat_fn,
-                                       impl=impl),
+                                       impl=impl, solve_cfg=solve_cfg),
             (coef_lo32, coef_hi32, np.float32(req.target_loss_pct),
              np.asarray(cand_v, np.float32)),
-            (impl,), controller.element_cost(t), False)
+            (impl, solve_cfg.key()), controller.element_cost(t), False,
+            config_label=solve_cfg.key())
 
         def resolve():
             if self._cand_v is None \

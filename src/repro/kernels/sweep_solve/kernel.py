@@ -33,7 +33,8 @@ ROW_BLOCK = 8        # batch samples per grid step (f32 sublane tile)
 LANES = 128          # feature lanes (one VPU register row)
 
 
-def _solve_kernel(c: int, iters: int, t_cl: float, feat_ref, out_ref):
+def _solve_kernel(c: int, iters: int, t_cl: float, lanes: int, feat_ref,
+                  out_ref):
     f = feat_ref[...]
     mpki = f[:, 0:c]
     ipc_base = f[:, c:2 * c]
@@ -84,25 +85,29 @@ def _solve_kernel(c: int, iters: int, t_cl: float, feat_ref, out_ref):
     zero = jnp.zeros_like(row_hit)
     ipc, loaded, util = jax.lax.fori_loop(0, iters, body,
                                           (ipc_base, zero, zero))
-    pad = jnp.zeros((f.shape[0], LANES - c - 2), f.dtype)
+    pad = jnp.zeros((f.shape[0], lanes - c - 2), f.dtype)
     out_ref[...] = jnp.concatenate([ipc, loaded, util, pad], axis=1)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n_cores", "iters", "t_cl", "interpret"))
+                   static_argnames=("n_cores", "iters", "t_cl", "interpret",
+                                    "row_block", "lanes"))
 def solve_pallas(feat, n_cores: int, iters: int = 25,
-                 t_cl: float = hw.T_CL_STD, *, interpret: bool = False):
-    """Run the packed fixed-point solve.  ``feat``: float32[B, 128] with B a
-    multiple of ROW_BLOCK.  Returns float32[B, 128] (see layout above)."""
-    b, lanes = feat.shape
-    if lanes != LANES or b % ROW_BLOCK:
-        raise ValueError(f"feat shape {(b, lanes)} must be "
-                         f"[k*{ROW_BLOCK}, {LANES}]")
+                 t_cl: float = hw.T_CL_STD, *, interpret: bool = False,
+                 row_block: int = ROW_BLOCK, lanes: int = LANES):
+    """Run the packed fixed-point solve.  ``feat``: float32[B, lanes] with B
+    a multiple of ``row_block`` (defaults: the module-constant VPU tile;
+    the autotuner passes measured alternatives).  Returns float32[B, lanes]
+    (see layout above)."""
+    b, got_lanes = feat.shape
+    if got_lanes != lanes or b % row_block:
+        raise ValueError(f"feat shape {(b, got_lanes)} must be "
+                         f"[k*{row_block}, {lanes}]")
     return pl.pallas_call(
-        functools.partial(_solve_kernel, n_cores, iters, t_cl),
-        grid=(b // ROW_BLOCK,),
-        in_specs=[pl.BlockSpec((ROW_BLOCK, LANES), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((ROW_BLOCK, LANES), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, LANES), jnp.float32),
+        functools.partial(_solve_kernel, n_cores, iters, t_cl, lanes),
+        grid=(b // row_block,),
+        in_specs=[pl.BlockSpec((row_block, lanes), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((row_block, lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, lanes), jnp.float32),
         interpret=interpret,
     )(feat)

@@ -16,9 +16,13 @@ from repro.kernels.sweep_solve import ref as _ref
 
 
 def pack_features(mpki, ipc_base, mlp, row_hit, eff_banks, write_mult,
-                  t_rcd, t_rp, t_ras, transfer_ns, peak_bw_gbps):
-    """Pack the SoA sample batch into the kernel's [B, 128] feature rows,
-    padding B up to the kernel's row block with benign (all-ones-ish) rows."""
+                  t_rcd, t_rp, t_ras, transfer_ns, peak_bw_gbps,
+                  row_block=None, lanes=None):
+    """Pack the SoA sample batch into the kernel's [B, lanes] feature rows,
+    padding B up to the kernel's row block with benign (all-ones-ish) rows
+    at the standard channel timings (the named ``hw`` constants)."""
+    row_block = row_block or _kernel.ROW_BLOCK
+    lanes = lanes or _kernel.LANES
     per_core = [mpki, ipc_base, mlp]                     # [B, C] each
     scalars = [row_hit, eff_banks, write_mult, t_rcd, t_rp, t_ras,
                transfer_ns, peak_bw_gbps]                # [B] each
@@ -26,39 +30,93 @@ def pack_features(mpki, ipc_base, mlp, row_hit, eff_banks, write_mult,
     cols = [jnp.asarray(x, jnp.float32) for x in per_core]
     cols += [jnp.asarray(x, jnp.float32)[:, None] for x in scalars]
     feat = jnp.concatenate(cols, axis=1)
-    feat = jnp.pad(feat, ((0, 0), (0, _kernel.LANES - feat.shape[1])))
-    pad_rows = (-b) % _kernel.ROW_BLOCK
+    feat = jnp.pad(feat, ((0, 0), (0, lanes - feat.shape[1])))
+    pad_rows = (-b) % row_block
     if pad_rows:
-        benign = jnp.zeros((pad_rows, _kernel.LANES), jnp.float32)
+        benign = jnp.zeros((pad_rows, lanes), jnp.float32)
         benign = benign.at[:, c:3 * c].set(1.0)          # ipc_base, mlp = 1
         benign = benign.at[:, 3 * c + 1].set(1.0)        # eff_banks = 1
         benign = benign.at[:, 3 * c + 2].set(1.0)        # write_mult = 1
-        benign = benign.at[:, 3 * c + 3:3 * c + 6].set(13.75)  # timings
-        benign = benign.at[:, 3 * c + 6].set(5.0)        # transfer_ns
-        benign = benign.at[:, 3 * c + 7].set(25.6)       # peak_bw
+        benign = benign.at[:, 3 * c + 3:3 * c + 6].set(hw.T_RCD_STD)
+        benign = benign.at[:, 3 * c + 6].set(hw.LINE_TRANSFER_NS)
+        benign = benign.at[:, 3 * c + 7].set(hw.PEAK_BW_GBPS)
         feat = jnp.concatenate([feat, benign], axis=0)
     return feat
+
+
+def _solve_ref_chunked(mpki, ipc_base, mlp, row_hit, eff_banks, write_mult,
+                       t_rcd, t_rp, t_ras, transfer_ns, peak_bw_gbps,
+                       *, t_cl, iters, unroll, chunk):
+    """Oracle with a tunable batch chunk: the flat axis runs through
+    ``lax.map`` over ``chunk``-sample slabs.  The pad samples are the same
+    benign rows ``pack_features`` appends (ipc_base/mlp/banks/write = 1,
+    standard channel timings), every sample solves independently, and the
+    pads are sliced back off — so chunking changes XLA's working-set shape
+    only.  Per-sample values can drift <=1e-6 from the unchunked oracle
+    (shape-dependent vectorization of the float reductions)."""
+    b = mpki.shape[0]
+    chunk = max(1, int(chunk))
+    pad = (-b) % chunk
+    per_core = [jnp.asarray(x, jnp.float32) for x in (mpki, ipc_base, mlp)]
+    scalars = [jnp.asarray(x, jnp.float32)
+               for x in (row_hit, eff_banks, write_mult, t_rcd, t_rp, t_ras,
+                         transfer_ns, peak_bw_gbps)]
+    if pad:
+        fills_pc = (0.0, 1.0, 1.0)                       # mpki, ipc_base, mlp
+        fills_sc = (0.0, 1.0, 1.0, hw.T_RCD_STD, hw.T_RP_STD, hw.T_RAS_STD,
+                    hw.LINE_TRANSFER_NS, hw.PEAK_BW_GBPS)
+        per_core = [jnp.pad(x, ((0, pad), (0, 0)), constant_values=v)
+                    for x, v in zip(per_core, fills_pc)]
+        scalars = [jnp.pad(x, (0, pad), constant_values=v)
+                   for x, v in zip(scalars, fills_sc)]
+    k = (b + pad) // chunk
+    xs = tuple(x.reshape(k, chunk, *x.shape[1:])
+               for x in per_core + scalars)
+    out = jax.lax.map(
+        lambda s: _ref.solve_ref(*s, t_cl=t_cl, iters=iters, unroll=unroll),
+        xs)
+    out = {key: v.reshape(k * chunk, *v.shape[2:]) for key, v in out.items()}
+    return {key: v[:b] for key, v in out.items()} if pad else out
 
 
 def solve(mpki, ipc_base, mlp, row_hit, eff_banks, write_mult,
           t_rcd, t_rp, t_ras, transfer_ns, peak_bw_gbps,
           t_cl: float = hw.T_CL_STD, iters: int = _ref.DEFAULT_ITERS,
-          impl: str = "auto"):
+          impl: str = "auto", config=None):
     """Batched fixed-point CPI/latency solve.  Returns the dict documented
-    in ``ref.solve_ref``."""
+    in ``ref.solve_ref``.
+
+    ``config`` is an optional ``autotune.KernelConfig``: ``unroll`` and a
+    nonzero ``oracle_chunk`` retune the reference path, blocks/lanes retile
+    the Pallas paths.  ``None`` (and the default config) reproduce the
+    historical behavior exactly.
+    """
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "reference"
     if impl == "reference":
+        unroll = config.unroll if config is not None else 1
+        if config is not None and config.oracle_chunk:
+            return _solve_ref_chunked(
+                mpki, ipc_base, mlp, row_hit, eff_banks, write_mult,
+                t_rcd, t_rp, t_ras, transfer_ns, peak_bw_gbps,
+                t_cl=t_cl, iters=iters, unroll=unroll,
+                chunk=config.oracle_chunk)
         return _ref.solve_ref(mpki, ipc_base, mlp, row_hit, eff_banks,
                               write_mult, t_rcd, t_rp, t_ras, transfer_ns,
-                              peak_bw_gbps, t_cl=t_cl, iters=iters)
+                              peak_bw_gbps, t_cl=t_cl, iters=iters,
+                              unroll=unroll)
     if impl not in ("pallas", "pallas_interpret"):
         raise ValueError(f"unknown impl {impl!r}")
+    row_block = config.row_block if config is not None else None
+    lanes = config.lane_block if config is not None else None
     b, c = mpki.shape
     feat = pack_features(mpki, ipc_base, mlp, row_hit, eff_banks, write_mult,
-                         t_rcd, t_rp, t_ras, transfer_ns, peak_bw_gbps)
+                         t_rcd, t_rp, t_ras, transfer_ns, peak_bw_gbps,
+                         row_block=row_block, lanes=lanes)
     out = _kernel.solve_pallas(feat, c, iters, t_cl,
-                               interpret=(impl == "pallas_interpret"))
+                               interpret=(impl == "pallas_interpret"),
+                               row_block=row_block or _kernel.ROW_BLOCK,
+                               lanes=lanes or _kernel.LANES)
     ipc = out[:b, 0:c]
     loaded = out[:b, c]
     util = out[:b, c + 1]

@@ -40,7 +40,8 @@ DEFAULT_ITERS = 25
 
 def solve_ref(mpki, ipc_base, mlp, row_hit, eff_banks, write_mult,
               t_rcd, t_rp, t_ras, transfer_ns, peak_bw_gbps,
-              t_cl: float = hw.T_CL_STD, iters: int = DEFAULT_ITERS):
+              t_cl: float = hw.T_CL_STD, iters: int = DEFAULT_ITERS,
+              unroll: int = 1):
     n_cores = mpki.shape[-1]
     miss = 1.0 - row_hit
     t_rc = t_ras + t_rp
@@ -84,8 +85,12 @@ def solve_ref(mpki, ipc_base, mlp, row_hit, eff_banks, write_mult,
         new_ipc = 0.5 * ipc + 0.5 / cpi                  # damped fixed point
         return (new_ipc, loaded, util), None
 
+    # ``unroll`` is an autotuner knob (repro.kernels.autotune): it changes
+    # only how XLA lowers the loop, never the step sequence, so every
+    # unroll factor is bit-identical to unroll=1 (today's behavior).
     init = (ipc_base, jnp.zeros_like(svc), jnp.zeros_like(svc))
-    (ipc, loaded, util), _ = jax.lax.scan(step, init, None, length=iters)
+    (ipc, loaded, util), _ = jax.lax.scan(step, init, None, length=iters,
+                                          unroll=max(1, int(unroll)))
     return finalize(ipc, loaded, util, mpki, ipc_base, row_hit)
 
 

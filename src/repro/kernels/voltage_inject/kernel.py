@@ -10,7 +10,9 @@ integer ops (compare / AND / XOR), which map onto the TPU VPU lanes.
 Tiling: rows x words blocks of (8, 1024) uint32 = 32 KiB per operand block,
 five operands resident -> ~160 KiB of VMEM per grid step, well inside the
 ~16 MiB VMEM budget while keeping the lane dimension (1024 words = 8 x 128
-lanes) MXU/VPU aligned.
+lanes) MXU/VPU aligned.  ``ROW_BLOCK`` / ``WORD_BLOCK`` are the *default*
+tile; the autotuner (``repro.kernels.autotune``) passes measured
+alternatives through the ``row_block`` / ``word_block`` statics.
 """
 from __future__ import annotations
 
@@ -36,24 +38,26 @@ def _inject_kernel(nplanes: int, data_ref, prob_ref, rand_ref, planes_ref,
     out_ref[...] = data ^ (flip * bad)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def inject_pallas(data, row_prob, rand_word, rand_planes, *, interpret=False):
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "row_block", "word_block"))
+def inject_pallas(data, row_prob, rand_word, rand_planes, *, interpret=False,
+                  row_block: int = ROW_BLOCK, word_block: int = WORD_BLOCK):
     r, w = data.shape
     p = rand_planes.shape[0]
-    if r % ROW_BLOCK or w % WORD_BLOCK:
+    if r % row_block or w % word_block:
         raise ValueError(f"shape {(r, w)} must tile by "
-                         f"({ROW_BLOCK}, {WORD_BLOCK})")
-    grid = (r // ROW_BLOCK, w // WORD_BLOCK)
+                         f"({row_block}, {word_block})")
+    grid = (r // row_block, w // word_block)
     return pl.pallas_call(
         functools.partial(_inject_kernel, p),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((ROW_BLOCK, WORD_BLOCK), lambda i, j: (i, j)),
-            pl.BlockSpec((ROW_BLOCK,), lambda i, j: (i,)),
-            pl.BlockSpec((ROW_BLOCK, WORD_BLOCK), lambda i, j: (i, j)),
-            pl.BlockSpec((p, ROW_BLOCK, WORD_BLOCK), lambda i, j: (0, i, j)),
+            pl.BlockSpec((row_block, word_block), lambda i, j: (i, j)),
+            pl.BlockSpec((row_block,), lambda i, j: (i,)),
+            pl.BlockSpec((row_block, word_block), lambda i, j: (i, j)),
+            pl.BlockSpec((p, row_block, word_block), lambda i, j: (0, i, j)),
         ],
-        out_specs=pl.BlockSpec((ROW_BLOCK, WORD_BLOCK), lambda i, j: (i, j)),
+        out_specs=pl.BlockSpec((row_block, word_block), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((r, w), jnp.uint32),
         interpret=interpret,
     )(data, row_prob, rand_word, rand_planes)

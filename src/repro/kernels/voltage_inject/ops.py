@@ -21,12 +21,15 @@ from repro.kernels.voltage_inject import kernel as _kernel
 from repro.kernels.voltage_inject import ref as _ref
 
 
-def _inject_padded(data, row_prob, rand_word, rand_planes, *, interpret):
+def _inject_padded(data, row_prob, rand_word, rand_planes, *, interpret,
+                   row_block=None, word_block=None):
     """Pad every operand's plane up to the kernel tile grid, run the Pallas
     kernel, slice the result back to the original shape."""
+    row_block = row_block or _kernel.ROW_BLOCK
+    word_block = word_block or _kernel.WORD_BLOCK
     r, w = data.shape
-    pad_r = (-r) % _kernel.ROW_BLOCK
-    pad_w = (-w) % _kernel.WORD_BLOCK
+    pad_r = (-r) % row_block
+    pad_w = (-w) % word_block
     if pad_r or pad_w:
         plane_pad = ((0, pad_r), (0, pad_w))
         data = jnp.pad(data, plane_pad)
@@ -34,22 +37,65 @@ def _inject_padded(data, row_prob, rand_word, rand_planes, *, interpret):
         rand_planes = jnp.pad(rand_planes, ((0, 0), *plane_pad))
         row_prob = jnp.pad(row_prob, (0, pad_r))
     out = _kernel.inject_pallas(data, row_prob, rand_word, rand_planes,
-                                interpret=interpret)
+                                interpret=interpret, row_block=row_block,
+                                word_block=word_block)
     if pad_r or pad_w:
         out = out[:r, :w]
     return out
 
 
-def inject(data, row_prob, rand_word, rand_planes, impl: str = "auto"):
-    """Flip bits in ``data`` per the voltage-error model.  See ref.py."""
+def _inject_ref_chunked(data, row_prob, rand_word, rand_planes, *, chunk):
+    """Oracle with a tunable row-chunk: run ``inject_ref`` over
+    ``chunk``-row slabs through ``lax.map`` instead of one whole-plane
+    expression.  The math is elementwise, so padding rows and slicing them
+    back keeps every chunk size bit-identical to the default oracle; what
+    changes is XLA's fusion/working-set shape — which is exactly the knob
+    the autotuner measures on CPU."""
+    r, w = data.shape
+    p = rand_planes.shape[0]
+    chunk = max(1, int(chunk))
+    pad_r = (-r) % chunk
+    if pad_r:
+        data = jnp.pad(data, ((0, pad_r), (0, 0)))
+        rand_word = jnp.pad(rand_word, ((0, pad_r), (0, 0)))
+        rand_planes = jnp.pad(rand_planes, ((0, 0), (0, pad_r), (0, 0)))
+        row_prob = jnp.pad(row_prob, (0, pad_r))
+    k = (r + pad_r) // chunk
+    planes_r = jnp.moveaxis(rand_planes, 0, 1)          # [r, p, w]
+    xs = (data.reshape(k, chunk, w), row_prob.reshape(k, chunk),
+          rand_word.reshape(k, chunk, w), planes_r.reshape(k, chunk, p, w))
+    out = jax.lax.map(
+        lambda s: _ref.inject_ref(s[0], s[1], s[2],
+                                  jnp.moveaxis(s[3], 1, 0)), xs)
+    out = out.reshape(k * chunk, w)
+    return out[:r] if pad_r else out
+
+
+def inject(data, row_prob, rand_word, rand_planes, impl: str = "auto",
+           config=None):
+    """Flip bits in ``data`` per the voltage-error model.  See ref.py.
+
+    ``config`` is an optional ``autotune.KernelConfig``: its blocks retile
+    the Pallas paths and a nonzero ``oracle_chunk`` chunks the reference
+    path.  ``None`` (and the default config) reproduce the historical
+    behavior bit-for-bit on every path.
+    """
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "reference"
     if impl == "reference":
+        if config is not None and config.oracle_chunk:
+            return jax.jit(_inject_ref_chunked, static_argnames=("chunk",))(
+                data, row_prob, rand_word, rand_planes,
+                chunk=config.oracle_chunk)
         return jax.jit(_ref.inject_ref)(data, row_prob, rand_word, rand_planes)
+    blocks = {}
+    if config is not None:
+        blocks = {"row_block": config.row_block,
+                  "word_block": config.lane_block}
     if impl == "pallas":
         return _inject_padded(data, row_prob, rand_word, rand_planes,
-                              interpret=False)
+                              interpret=False, **blocks)
     if impl == "pallas_interpret":
         return _inject_padded(data, row_prob, rand_word, rand_planes,
-                              interpret=True)
+                              interpret=True, **blocks)
     raise ValueError(f"unknown impl {impl!r}")
