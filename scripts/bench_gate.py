@@ -50,6 +50,10 @@ SPECS = {
     },
     "BENCH_fleet.json": {
         "stream.dispatch_retraces": "lower",
+        # ECC-aware admission must keep widening the at-speed envelope:
+        # extra admitted (DIMM, candidate) pairs are deterministic physics,
+        # not timing — any drop means the ECC stack stopped re-admitting
+        "ecc.extra_candidates": "higher",
     },
     "BENCH_energy.json": {
         # batched six-component breakdown vs the scalar python loop —

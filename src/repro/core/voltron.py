@@ -285,7 +285,7 @@ def _operating_point(v: float, bank_locality: bool) -> system.OperatingPoint:
 
 def fleet_tables(grid=None, *, max_latency: float = 20.0,
                  temp_c: float = 20.0, dispatch: str = "auto",
-                 device_models=None):
+                 device_models=None, policies=None):
     """Per-DIMM safe candidate tables for the Algorithm-1 voltages.
 
     For every characterized DIMM and every candidate (plus the 1.35 V
@@ -298,6 +298,11 @@ def fleet_tables(grid=None, *, max_latency: float = 20.0,
     ``device_models``: optional per-DIMM :mod:`repro.power` model
     assignment (``{module: name}`` or [D] sequence) for heterogeneous
     fleets; default ``ddr3l`` everywhere.
+
+    ``policies``: optional ordered ``ReliabilityPolicy`` stack forwarded
+    to :func:`repro.engine.fleet.build_tables` (None = the legacy
+    min-latency + hammer floors; ``fleet.ecc_policies()`` adds ECC-aware
+    admission between them).
     """
     from repro import engine
     from repro.engine import fleet
@@ -306,7 +311,8 @@ def fleet_tables(grid=None, *, max_latency: float = 20.0,
     cand_v = np.array(CANDIDATE_VOLTAGES + [hw.VDD_NOMINAL])
     return fleet.build_tables(grid, cand_v, max_latency=max_latency,
                               temp_c=temp_c, dispatch=dispatch,
-                              device_models=device_models)
+                              device_models=device_models,
+                              policies=policies)
 
 
 def run_fleet(wls, grid=None, target_loss_pct: float = DEFAULT_TARGET_PCT,

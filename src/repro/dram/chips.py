@@ -244,7 +244,14 @@ class DIMM:
         """Fractions of 64-bit data beats with 0 / 1 / 2 / >2 bit errors
         (Fig. 9).  Within a failing beat, bad bits ~ Binomial(64, p_bit).
         ``temp_c`` reaches the underlying line-error model so the Fig. 9
-        densities compose with the Section 5.3 temperature scenarios."""
+        densities compose with the Section 5.3 temperature scenarios.
+
+        This is the scalar reference for the fleet's ECC admission:
+        ``repro.engine.population.beat_error_batch`` mirrors exactly this
+        math on the flat D x K x T batch axis (closed-form binomial
+        powers instead of ``scipy.stats.binom.pmf`` — agreement is float64
+        round-off, not bit-exact), so any change here must land in
+        ``population._beat_error_flat_fn`` too."""
         from scipy import stats
         v_arr = np.atleast_1d(np.asarray(v, dtype=np.float64))
         frac_line = self.line_error_fraction(v_arr, t_rcd, t_rp, temp_c)

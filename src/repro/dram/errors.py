@@ -212,6 +212,14 @@ def inject_hammer_errors(dimm: chips.DIMM, data_u32: jax.Array, bank: int,
 # --------------------------------------------------------------------------
 # ECC analysis (Section 4.4)
 # --------------------------------------------------------------------------
+# Minimum fraction of erroneous beats SECDED must fully correct before the
+# Section 4.4 analysis deems it "sufficient".  Half is the paper's implicit
+# bar — below it, most failing beats carry >2 flips and SECDED mostly
+# detects (or silently miscorrects) instead of fixing.  The ECC admission
+# policy (``repro.engine.fleet.EccAdmission``) exposes it as ``sufficiency=``.
+SECDED_SUFFICIENCY_THRESHOLD = 0.5
+
+
 @dataclasses.dataclass(frozen=True)
 class SecdedOutcome:
     corrected: float        # beats fully corrected (exactly 1 bad bit)
@@ -224,24 +232,77 @@ class SecdedOutcome:
         return self.detected + self.undetected_or_mis
 
 
-def secded_outcomes(dimm: chips.DIMM, v: float, t_rcd: float = 10.0,
+@dataclasses.dataclass(frozen=True)
+class EccProfile:
+    """How one ECC scheme partitions the Fig. 9 beat classes
+    (one / two / many bad bits) into correctable / detectable / silent
+    outcome rates — the arxiv 2204.10378 transparency triple.
+
+    Each field is a subset of ``("one", "two", "many")``; the three must
+    partition it.  ``corrects`` beats come back clean, ``detects`` beats
+    raise a machine check (data loss, no corruption), ``silent`` beats may
+    corrupt undetected — the quantity reliability policies budget hardest.
+    """
+
+    name: str
+    corrects: tuple
+    detects: tuple
+    silent: tuple
+
+    def __post_init__(self):
+        classes = self.corrects + self.detects + self.silent
+        if sorted(classes) != ["many", "one", "two"]:
+            raise ValueError(f"profile {self.name!r} must partition "
+                             f"one/two/many, got {classes}")
+
+    def rates(self, dist: dict) -> tuple:
+        """(correctable, detectable, silent) rates from a
+        ``beat_error_distribution`` dict — arrays in, arrays out."""
+        total = lambda keys: sum((np.asarray(dist[k], np.float64)
+                                  for k in keys), np.float64(0.0))
+        return total(self.corrects), total(self.detects), total(self.silent)
+
+
+# SECDED corrects 1 flip and detects 2; on-die ECC (SEC, no extra detect
+# bit) corrects 1 flip and passes everything else through silently.
+ECC_PROFILES = {
+    "secded": EccProfile("secded", ("one",), ("two",), ("many",)),
+    "on_die_sec": EccProfile("on_die_sec", ("one",), (), ("two", "many")),
+}
+
+
+def ecc_profile(name: str) -> EccProfile:
+    try:
+        return ECC_PROFILES[name]
+    except KeyError:
+        raise ValueError(f"unknown ECC profile {name!r}; registered: "
+                         f"{sorted(ECC_PROFILES)}") from None
+
+
+def secded_outcomes(dimm: chips.DIMM, v, t_rcd: float = 10.0,
                     t_rp: float = 10.0,
                     temp_c: float = 20.0) -> SecdedOutcome:
     """Apply SECDED semantics to the modeled beat-error density (Fig. 9).
 
     ``temp_c`` threads through to the beat-error model (previously pinned
     at 20 C) so the ECC analysis composes with the Section 5.3 temperature
-    scenarios; the default leaves existing results unchanged."""
+    scenarios; the default leaves existing results unchanged.
+
+    Shape-preserving: a scalar ``v`` yields float fields (the historical
+    contract), an array ``v`` yields fields of the same shape — earlier
+    revisions silently kept only element [0] of vector inputs.
+    """
     dist = dimm.beat_error_distribution(v, t_rcd, t_rp, temp_c)
-    one = float(np.atleast_1d(dist["one"])[0])
-    two = float(np.atleast_1d(dist["two"])[0])
-    many = float(np.atleast_1d(dist["many"])[0])
-    zero = float(np.atleast_1d(dist["zero"])[0])
-    return SecdedOutcome(corrected=one, detected=two,
-                         undetected_or_mis=many, clean=zero)
+    if np.ndim(v) == 0:
+        pick = lambda k: float(np.atleast_1d(dist[k])[0])
+    else:
+        pick = lambda k: np.asarray(dist[k], np.float64)
+    return SecdedOutcome(corrected=pick("one"), detected=pick("two"),
+                         undetected_or_mis=pick("many"), clean=pick("zero"))
 
 
-def secded_is_sufficient(dimm: chips.DIMM, v: float, threshold: float = 0.5,
+def secded_is_sufficient(dimm: chips.DIMM, v: float,
+                         threshold: float = SECDED_SUFFICIENCY_THRESHOLD,
                          temp_c: float = 20.0) -> bool:
     """Would SECDED fix at least ``threshold`` of erroneous beats?  The
     paper's answer (Section 4.4) is no — most failing beats have >2 flips."""

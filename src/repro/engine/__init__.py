@@ -145,6 +145,49 @@ conventions:
   the *lane's own* model at nominal (the comparison is reduced-voltage vs
   nominal on the same part, never across parts).
 
+The reliability-policy pipeline
+===============================
+
+``fleet.build_tables`` does not hard-code its admission rules: candidate
+admission is an ordered pipeline of :class:`repro.engine.fleet
+.ReliabilityPolicy` stages.  Each policy reads a frozen
+``PolicyContext`` (grid, candidate voltages, latency search knobs, mesh /
+dispatch mode) and mutates a ``PolicyState`` holding the per-(DIMM,
+candidate) ``timings`` [D, K, 3], the boolean admission mask ``valid``
+[D, K], named margin rows (``state.margins``), and optional reliability
+rate rows.  The contract:
+
+- **Composition is mask intersection + NaN exclusion:** a policy may only
+  narrow ``valid`` (AND its own verdict in) or — for admission policies —
+  widen it by filling previously-NaN timing rows it can vouch for.  After
+  the pipeline runs, ``build_tables`` re-NaNs every excluded candidate's
+  timings, so downstream consumers keep the single "NaN = excluded"
+  convention regardless of which stack produced the table.
+- **The legacy stack is built-in and bit-exact:** ``legacy_policies()``
+  returns ``(MinLatencyFloor(), HammerFloor())`` — re-expressions of the
+  pre-pipeline error-free-latency floor and hammer-margin floor whose
+  composed output is bit-equal to the old monolithic ``build_tables``
+  (property-tested in ``tests/test_reliability.py``), and is the default
+  when ``policies=`` is omitted.
+- **ECC-aware admission rides the same flat axis:** ``EccAdmission``
+  (stack helper ``ecc_policies()``) re-admits candidates the latency
+  floor rejected when an ECC profile (``dram.errors.ecc_profile`` —
+  ``"secded"`` / ``"on_die_sec"``) corrects their residual beat-error
+  distribution at the operating temperature and the silent/residual rates
+  fit the configured budgets, with the vendor recovery/fail voltage
+  floors kept binding.  The beat-error distribution is evaluated for the
+  whole D x K x T grid in one dispatched call
+  (``population.beat_error_batch``, stats entry ``"beat_error"``; the
+  scalar reference ``dram.chips.DIMM.beat_error_distribution`` /
+  ``dram.errors.secded_outcomes`` loop is kept as ``impl="scalar"``).
+- **Tables carry their provenance:** ``FleetTables.policy_stack`` records
+  each stage's parameterized descriptor and ``stack_name`` names the
+  stack (``"min_latency+hammer"`` for the default, ``"legacy"`` on
+  hand-built tables predating the pipeline); ECC-built tables additionally
+  carry per-candidate ``correctable`` / ``detectable`` / ``silent`` [D, K]
+  rate rows, surfaced per vendor by
+  ``FleetBatchResult.vendor_reliability()``.
+
 The serving contract
 ====================
 
@@ -176,7 +219,14 @@ first.  The contract:
   row also carries its DIMM's device-model name, so heterogeneous fleet
   requests coalesce with homogeneous ones (the per-lane coefficient rows
   are batched operands, not statics); ``FleetRequest.device_model``
-  overrides the model for every lane of one request.
+  overrides the model for every lane of one request.  Tables install
+  into a named per-stack registry (``install_tables(tables, stack=)`` /
+  ``table_stacks``), so ECC-on, ECC-off and temperature-excursion
+  variants of the same DIMMs coexist mid-stream and
+  ``FleetRequest.policy_stack`` routes each request to its stack;
+  requests against different stacks still coalesce into one megabatch
+  when their candidate grids agree, because the per-lane table rows are
+  batched operands too.
 
 ``launch.fleet_serve`` drives the service under bursty open-loop load;
 ``benchmarks/serve_bench.py`` gates the coalescing speedup.
@@ -241,9 +291,12 @@ from repro.engine import test1  # noqa: F401
 from repro.engine.batch import PointGrid, WorkloadBatch  # noqa: F401
 from repro.engine.controller import (ControllerBatchResult,  # noqa: F401
                                      run_batched)
-from repro.engine.fleet import (FleetBatchResult,  # noqa: F401
-                                FleetTables, build_tables,
-                                run_fleet_batched)
+from repro.engine.fleet import (EccAdmission, FleetBatchResult,  # noqa: F401
+                                FleetTables, HammerFloor,
+                                MinLatencyFloor, PolicyContext,
+                                PolicyState, ReliabilityPolicy,
+                                build_tables, ecc_policies,
+                                legacy_policies, run_fleet_batched)
 from repro.engine.population import (CharacterizationBatch,  # noqa: F401
                                      DimmGrid, characterize_batch)
 from repro.engine.service import (AdmissionError,  # noqa: F401

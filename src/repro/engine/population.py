@@ -392,6 +392,156 @@ def _characterize_batched(grid, v, t_grid, patterns, retention_ms,
 
 
 # --------------------------------------------------------------------------
+# Batched beat-error distribution (Fig. 9) — the ECC-admission substrate
+# --------------------------------------------------------------------------
+def _beat_error_flat_fn(req_rcd, req_rp, sigma, floor, vmin, v, t_rcd,
+                        t_rp, field_n, valid):
+    """Fig. 9 beat-error classes over the flat N = D*K*T batch (float64
+    under x64): the jnp form of ``DIMM.beat_error_distribution``.
+
+    Unlike the characterization kernel, the programmed latencies ``t_rcd``
+    / ``t_rp`` are *per-lane* operands — the ECC admission policy evaluates
+    every candidate at its own table timings (probe timings where the
+    min-latency floor excluded it).  The line-error fraction keeps the
+    scalar path's float32 threshold convention (see
+    ``_characterize_flat_fn``); the binomial beat classes are closed-form
+    powers, so parity with the scipy-pmf scalar reference is to float64
+    round-off, not bit-exact (tests assert ~1e-9 relative).
+    """
+    xmax = chips.CELL_XMAX
+    lo, hi = _ndtr(-jnp.asarray(xmax, req_rcd.dtype)), \
+        _ndtr(jnp.asarray(xmax, req_rcd.dtype))
+
+    def trunc_phi(x):
+        p = (_ndtr(jnp.clip(x, -xmax, xmax)) - lo) / (hi - lo)
+        return jnp.where(x <= -xmax, 0.0, jnp.where(x >= xmax, 1.0, p))
+
+    sigma32 = sigma.astype(jnp.float32)
+    p_ok = jnp.ones_like(field_n)
+    for t_prog, req in ((t_rcd, req_rcd), (t_rp, req_rp)):
+        x32 = (t_prog.astype(jnp.float32) / req.astype(jnp.float32)
+               - 1.0) / sigma32                              # [N] f32
+        p_ok = p_ok * trunc_phi(x32.astype(field_n.dtype)[:, None] - field_n)
+    frac = 1.0 - jnp.mean(p_ok, axis=1)
+    frac = jnp.where(v < floor, jnp.maximum(frac, 0.5), frac)
+
+    # within a failing line, ~55% of beats are affected; bad bits in an
+    # affected beat ~ Binomial(BEAT_BITS, p_bit) conditioned on >= 1 flip
+    p_beat_bad = frac * chips.BEAT_BAD_FRAC
+    deficit = jnp.clip((vmin - v) / chips.DEFICIT_RANGE_V, 0.0, 1.5)
+    p_bit = chips.P_BIT_BASE + chips.P_BIT_SLOPE * deficit
+    n = hw.BEAT_BITS
+    q = 1.0 - p_bit
+    p0 = q ** n
+    p1 = n * p_bit * q ** (n - 1)
+    p2 = (n * (n - 1) / 2.0) * p_bit ** 2 * q ** (n - 2)
+    denom = jnp.maximum(1.0 - p0, 1e-12)
+    one = p_beat_bad * p1 / denom
+    two = p_beat_bad * p2 / denom
+    many = p_beat_bad * jnp.maximum(1.0 - p0 - p1 - p2, 0.0) / denom
+    out = {"zero": 1.0 - (one + two + many), "one": one, "two": two,
+           "many": many}
+    return {k: jnp.where(valid, a, 0.0) for k, a in out.items()}
+
+
+_beat_error_flat = jax.jit(_beat_error_flat_fn)
+
+
+def beat_error_inputs(grid: DimmGrid, v, t_rcd, t_rp, t_grid) -> list:
+    """Eager per-lane operands of ``_beat_error_flat_fn`` for the flattened
+    D x K x T grid.
+
+    ``v`` is the [K] candidate-voltage vector; ``t_rcd`` / ``t_rp`` are
+    scalars or [D, K] per-(DIMM, candidate) programmed latencies (the ECC
+    policy passes each candidate's own table timings).  Lane values depend
+    only on their own (DIMM, candidate, temperature) — same composability
+    contract as ``characterize_inputs``.
+    """
+    v = np.atleast_1d(np.asarray(v, np.float64))
+    d_, k_, t_ = grid.n_dimms, v.size, len(t_grid)
+    req = _required_latency_grid(grid, v, t_grid)       # [D, K, T] per op
+    flat = lambda a: np.ascontiguousarray(
+        np.broadcast_to(a, (d_, k_, t_)).reshape(-1))
+    per_d = lambda a: flat(np.asarray(a, np.float64)[:, None, None])
+    per_dk = lambda a: flat(np.broadcast_to(
+        np.asarray(a, np.float64), (d_, k_))[:, :, None])
+    field64 = grid.susceptibility.reshape(d_, FIELD_SIZE)
+    d_idx = flat(np.arange(d_)[:, None, None]).astype(np.int32)
+    return [
+        req["rcd"].reshape(-1), req["rp"].reshape(-1),
+        per_d(grid.cell_sigma), per_d(grid.fail_floor), per_d(grid.vmin),
+        flat(v[None, :, None]),
+        per_dk(t_rcd), per_dk(t_rp),
+        field64[d_idx],
+    ]
+
+
+def beat_error_batch(grid: DimmGrid, v, t_rcd=10.0, t_rp=10.0,
+                     t_grid=(20.0,), *, mesh=None, impl: str = "auto",
+                     dispatch: str = "auto") -> dict:
+    """Fig. 9 beat-error distribution for every (DIMM, candidate,
+    temperature) at once: dict of float64 [D, K, T] arrays keyed
+    ``zero`` / ``one`` / ``two`` / ``many``.
+
+    The D x K x T grid flattens into one batch axis dispatched as entry
+    ``"beat_error"`` (bucketed AOT reuse / chunked streaming, same plane
+    as ``characterize_batch``); ``dispatch="direct"`` keeps the
+    exact-shape jit call.  ``impl="scalar"`` walks the per-DIMM
+    ``DIMM.beat_error_distribution`` loop — the parity reference the ECC
+    admission tests compare against (scipy binomial pmf vs the closed-form
+    powers here: equal to float64 round-off).
+    """
+    v = np.atleast_1d(np.asarray(v, np.float64))
+    d_, k_, t_ = grid.n_dimms, v.size, len(t_grid)
+    if impl == "scalar":
+        if grid.dimms is None:
+            raise ValueError("impl='scalar' needs a grid built from real "
+                             "DIMMs")
+        t_rcd_dk = np.broadcast_to(np.asarray(t_rcd, np.float64), (d_, k_))
+        t_rp_dk = np.broadcast_to(np.asarray(t_rp, np.float64), (d_, k_))
+        out = {key: np.zeros((d_, k_, t_))
+               for key in ("zero", "one", "two", "many")}
+        for di, dimm in enumerate(grid.dimms):
+            for ki, vv in enumerate(v):
+                for ti, temp in enumerate(t_grid):
+                    dist = dimm.beat_error_distribution(
+                        float(vv), float(t_rcd_dk[di, ki]),
+                        float(t_rp_dk[di, ki]), float(temp))
+                    for key in out:
+                        out[key][di, ki, ti] = float(
+                            np.atleast_1d(dist[key])[0])
+        return out
+    if impl not in ("auto", "batched"):
+        raise ValueError(f"unknown impl {impl!r}")
+    if dispatch not in ("auto", "bucketed", "chunked", "direct"):
+        raise ValueError(f"unknown dispatch {dispatch!r}")
+    inputs = beat_error_inputs(grid, v, t_rcd, t_rp, t_grid)
+    mesh = mesh_lib.make_batch_mesh() if mesh is None else mesh
+    n_devices = int(mesh.devices.size)
+    with enable_x64():
+        if dispatch == "direct":
+            inputs, n_pad = _pad_flat(inputs, n_devices)
+            args = [jnp.asarray(a) for a in inputs]
+            valid = jnp.ones((args[0].shape[0],), bool)
+            if n_devices > 1:
+                args = [jax.device_put(a,
+                                       mesh_lib.batch_sharding(mesh, a.ndim))
+                        for a in args]
+                valid = jax.device_put(valid,
+                                       mesh_lib.batch_sharding(mesh, 1))
+            out = _beat_error_flat(*args, valid)
+            out = {k: np.asarray(a, np.float64) for k, a in out.items()}
+            if n_pad:
+                out = {k: a[:-n_pad] for k, a in out.items()}
+        else:
+            out = dispatch_lib.dispatch_flat(
+                "beat_error", _beat_error_flat_fn, inputs, (),
+                mesh=mesh, element_cost=8 * FIELD_SIZE, mode=dispatch)
+            out = {k: np.asarray(a, np.float64) for k, a in out.items()}
+    return {k: a.reshape(d_, k_, t_) for k, a in out.items()}
+
+
+# --------------------------------------------------------------------------
 # Scalar reference implementation (the original per-DIMM Python loop)
 # --------------------------------------------------------------------------
 def _characterize_scalar(grid, v, t_grid, patterns, retention_ms,

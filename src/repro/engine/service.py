@@ -52,7 +52,14 @@ compatible within an entry point, indifferent to batch composition.
   :class:`TableUnavailableError` while every other lane in the same
   megabatch completes bit-exact; re-deriving the table via
   ``fleet.build_tables`` + ``install_tables`` restores service without a
-  restart.
+  restart.  The registry is keyed by *policy stack*
+  (``FleetTables.policy_stack`` identity, or an explicit ``stack=`` name):
+  several table sets — ECC-on vs ECC-off admission, a temperature
+  excursion — stay installed side by side, and each
+  :class:`FleetRequest` picks one via ``policy_stack`` (None = the default
+  stack).  Requests against different stacks coalesce into the same
+  megabatch whenever their candidate grids agree, since table rows are
+  per-lane operands, never statics.
 
 ``run_request`` serves one request synchronously through the same lowering
 (one dispatch per request) — the request-at-a-time baseline the coalescing
@@ -151,6 +158,13 @@ class FleetRequest:
     # Optional repro.power device-model override for every lane of this
     # request; None uses each DIMM's installed table model.
     device_model: str | None = None
+    # Which installed table stack serves this request: a name passed to
+    # (or derived by) ``install_tables``.  None = the service's default
+    # stack.  Lets ECC-on / ECC-off / temperature-excursion table sets
+    # coexist mid-stream — requests against different stacks still
+    # coalesce into one megabatch when their candidate grids agree,
+    # because table rows are per-lane operands, never statics.
+    policy_stack: str | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -224,6 +238,21 @@ class _TableRow:
     lat_feat: np.ndarray       # [K-1]
     hammer_margin: np.ndarray  # [K]; NaN where min-latency excluded
     model: str = "ddr3l"       # repro.power device-model name
+    # reliability-transparency rows ([K] each; None when the stack that
+    # built the tables had no ECC policy)
+    correctable: np.ndarray | None = None
+    detectable: np.ndarray | None = None
+    silent: np.ndarray | None = None
+
+
+@dataclasses.dataclass
+class _StackTables:
+    """One installed table set: the per-module rows of a policy stack plus
+    the candidate grid they were built against."""
+
+    cand_v: np.ndarray
+    rows: dict                 # module -> _TableRow
+    policy_stack: tuple = ()   # FleetTables.policy_stack descriptors
 
 
 # --------------------------------------------------------------------------
@@ -243,8 +272,8 @@ class EngineService:
         self._model = model
         self._mesh = mesh
         self._n_devices = 1 if mesh is None else int(mesh.devices.size)
-        self._tables: dict = {}
-        self._cand_v: np.ndarray | None = None
+        self._stacks: dict = {}            # stack name -> _StackTables
+        self._default_stack: str | None = None
         self._feat_rows: dict = {}
         self._lane_cache: dict = {}
         if tables is not None:
@@ -268,27 +297,64 @@ class EngineService:
 
     @property
     def table_modules(self) -> tuple:
-        return tuple(self._tables)
+        st = self._stacks.get(self._default_stack)
+        return tuple(st.rows) if st is not None else ()
+
+    @property
+    def table_stacks(self) -> tuple:
+        """Names of every installed table stack (the default stack first)."""
+        names = list(self._stacks)
+        if self._default_stack in names:
+            names.remove(self._default_stack)
+            names.insert(0, self._default_stack)
+        return tuple(names)
 
     # -- table registry (live swap / failure injection) --------------------
-    def install_tables(self, tables) -> None:
+    def install_tables(self, tables, stack: str | None = None, *,
+                       make_default: bool = True) -> str:
         """Install/replace per-DIMM safe-voltage table rows from a
         :class:`repro.engine.fleet.FleetTables` (e.g. re-derived via
-        ``fleet.build_tables`` after a mid-stream drop).  The candidate
-        grid is shared service-wide; installing tables with a different
-        ``cand_v`` replaces it and stales queued fleet requests."""
-        self._cand_v = np.asarray(tables.cand_v, np.float64)
+        ``fleet.build_tables`` after a mid-stream drop).
+
+        ``stack`` names the table set; None derives the name from the
+        tables' own ``policy_stack`` identity.  Installing into an existing
+        stack with the same candidate grid merges the rows (per-module
+        replacement — the historical single-registry behavior); a different
+        ``cand_v`` replaces the stack wholesale and stales its queued fleet
+        requests.  ``make_default`` (default True) points requests that
+        carry no ``FleetRequest.policy_stack`` at this stack; pass False to
+        install a scenario stack (ECC-on, a temperature excursion) beside
+        the live default.  Returns the stack name.
+        """
+        name = stack if stack is not None else tables.stack_name
+        cand_v = np.asarray(tables.cand_v, np.float64)
+        st = self._stacks.get(name)
+        if st is None or st.cand_v.tobytes() != cand_v.tobytes():
+            st = _StackTables(cand_v, {}, tuple(tables.policy_stack))
+            self._stacks[name] = st
+        row = lambda a, i: None if a is None else a[i]
         for i, module in enumerate(tables.modules):
-            self._tables[module] = _TableRow(
+            st.rows[module] = _TableRow(
                 tables.vendors[i], tables.timings[i], tables.valid[i],
                 tables.lat_feat[i], tables.hammer_margin[i],
-                tables.device_models[i])
+                tables.device_models[i],
+                correctable=row(tables.correctable, i),
+                detectable=row(tables.detectable, i),
+                silent=row(tables.silent, i))
+        if make_default or self._default_stack is None:
+            self._default_stack = name
+        return name
 
-    def drop_table(self, module: str) -> None:
+    def drop_table(self, module: str, stack: str | None = None) -> None:
         """Drop one DIMM's table mid-stream (failure injection): queued
         and future fleet requests naming it fail fast with
-        :class:`TableUnavailableError`; other lanes are unaffected."""
-        self._tables.pop(module, None)
+        :class:`TableUnavailableError`; other lanes are unaffected.
+        ``stack`` limits the drop to one table stack; None (the default)
+        drops the DIMM from every installed stack."""
+        targets = (self._stacks.values() if stack is None
+                   else filter(None, [self._stacks.get(stack)]))
+        for st in targets:
+            st.rows.pop(module, None)
 
     # -- observability -----------------------------------------------------
     def stats(self) -> dict:
@@ -596,9 +662,15 @@ class EngineService:
 
     def _lower_fleet(self, req: FleetRequest) -> _Lowered:
         from repro.core import voltron
-        if self._cand_v is None:
+        stack_name = (req.policy_stack if req.policy_stack is not None
+                      else self._default_stack)
+        stack = self._stacks.get(stack_name)
+        if stack is None:
             raise TableUnavailableError(
-                "*", "no FleetTables installed on this service")
+                "*", "no FleetTables installed on this service"
+                if stack_name is None else
+                f"no FleetTables installed for policy stack {stack_name!r} "
+                f"(installed: {list(self._stacks)})")
         for name in req.workloads:
             if name not in self._workloads:
                 raise ServiceError(f"workload {name!r} is not registered "
@@ -621,7 +693,7 @@ class EngineService:
             phases = voltron._phase_matrix(wb.names, req.n_intervals, cycles,
                                            req.phase_seed, req.phase_amplitude)
         impl = ("pallas" if jax.default_backend() == "tpu" else "reference")
-        cand_v = self._cand_v
+        cand_v = stack.cand_v
         cand_bytes = cand_v.tobytes()
         w, d = wb.n_workloads, len(req.modules)
         t = int(req.n_intervals)
@@ -644,14 +716,14 @@ class EngineService:
             config_label=solve_cfg.key())
 
         def resolve():
-            if self._cand_v is None \
-                    or self._cand_v.tobytes() != cand_bytes:
+            st = self._stacks.get(stack_name)
+            if st is None or st.cand_v.tobytes() != cand_bytes:
                 raise TableUnavailableError(
-                    "*", "the service's candidate grid changed while the "
-                    "request was queued")
+                    "*", f"table stack {stack_name!r}'s candidate grid "
+                    "changed while the request was queued")
             rows = []
             for m in req.modules:
-                row = self._tables.get(m)
+                row = st.rows.get(m)
                 if row is None:
                     raise TableUnavailableError(m)
                 rows.append(row)
@@ -685,17 +757,27 @@ class EngineService:
                    for k, a in out.items()}
             selected = cand_v[out["selected_idx"]]
             shape2 = lambda a: a.reshape(w, d)
-            vendors = tuple(self._tables[m].vendor if m in self._tables
+            st = self._stacks.get(stack_name)
+            rows = st.rows if st is not None else {}
+            vendors = tuple(rows[m].vendor if m in rows
                             else "?" for m in req.modules)
             device_models = tuple(
-                req.device_model or (self._tables[m].model
-                                     if m in self._tables else "ddr3l")
+                req.device_model or (rows[m].model if m in rows else "ddr3l")
                 for m in req.modules)
             k = cand_v.size
             margin = np.stack([
-                np.asarray(self._tables[m].hammer_margin, np.float64)
-                if m in self._tables else np.full(k, np.nan)
+                np.asarray(rows[m].hammer_margin, np.float64)
+                if m in rows else np.full(k, np.nan)
                 for m in req.modules])                          # [D, K]
+            # reliability-transparency rows: present iff every named
+            # module's row carries them (a stack built with an ECC policy)
+            rel = {}
+            if all(m in rows and rows[m].silent is not None
+                   for m in req.modules):
+                for key in ("correctable", "detectable", "silent"):
+                    rel[key] = np.stack([
+                        np.asarray(getattr(rows[m], key), np.float64)
+                        for m in req.modules])                  # [D, K]
             return fleet_lib.FleetBatchResult(
                 wb.names, tuple(req.modules), vendors, cand_v,
                 selected.reshape(w, d, -1),
@@ -707,6 +789,10 @@ class EngineService:
                 margin,
                 base_component_j=out["base_component_j"].reshape(w, d, -1),
                 pt_component_j=out["pt_component_j"].reshape(w, d, -1),
-                device_models=device_models)
+                device_models=device_models,
+                correctable=rel.get("correctable"),
+                detectable=rel.get("detectable"),
+                silent=rel.get("silent"),
+                policy_stack=st.policy_stack if st is not None else ())
 
         return _Lowered(key, spec, w * d, resolve, post)

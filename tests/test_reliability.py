@@ -1,0 +1,404 @@
+"""The reliability-policy pipeline: composable candidate admission
+(min-latency / hammer / ECC) from errors -> fleet -> service.
+
+Invariants under test:
+
+- the default (legacy) two-policy stack reproduces the pre-pipeline
+  ``build_tables`` math bit-exactly — property-tested over random DIMM
+  subsets and latency ceilings against a straight-line reimplementation;
+- the batched Fig. 9 beat-error distribution (``beat_error_batch``,
+  dispatch entry ``"beat_error"``) matches the scalar
+  ``DIMM.beat_error_distribution`` per (DIMM, candidate, temperature) to
+  float64 round-off, and dispatched == direct bit-exactly;
+- ``secded_outcomes`` preserves input shape (regression: array voltages
+  used to collapse to element [0]);
+- the ECC stack only ever *widens* admission — never below the vendor
+  recovery / signal-integrity floors, always within the silent-rate
+  budget — and per-lane ``run_suite`` parity holds on the widened tables;
+- the service's per-stack table registry routes
+  ``FleetRequest.policy_stack`` so ECC-on and ECC-off tables coexist
+  mid-stream.
+"""
+from __future__ import annotations
+
+import asyncio
+import functools
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+from repro import hw
+from repro.core import perf_model, voltron
+from repro.dram import chips, circuit, errors
+from repro.engine import fleet, population, service as svc
+from repro.engine import test1 as engine_test1
+from repro.memsim import workloads
+
+ALL_MODULES = tuple(row[0] for row in chips.TABLE7)
+# A-vendor parts re-admitted at 1.10 V and C6 at 1.25 V under the at-speed
+# (max_latency=10) ECC stack; B5 stays out (silent rate above budget).
+MODULES = ("A2", "A5", "B5", "C6")
+CAND_V = np.array(voltron.CANDIDATE_VOLTAGES + [hw.VDD_NOMINAL])
+AT_SPEED = 10.0
+
+
+@functools.lru_cache(maxsize=1)
+def _env():
+    grid = population.DimmGrid.from_population(MODULES)
+    legacy = fleet.build_tables(grid, CAND_V, max_latency=AT_SPEED)
+    ecc = fleet.build_tables(grid, CAND_V, max_latency=AT_SPEED,
+                             policies=fleet.ecc_policies())
+    wls = tuple(workloads.homogeneous_workloads()[:2])
+    return grid, legacy, ecc, wls, perf_model.fit()
+
+
+# --------------------------------------------------------------------------
+# Legacy-stack bit-exactness (the refactor's ground rule)
+# --------------------------------------------------------------------------
+def _legacy_reference(grid, cand_v, max_latency, window_ms, scale=None):
+    """Straight-line reimplementation of the pre-pipeline build_tables
+    admission math (no ReliabilityPolicy machinery)."""
+    minlat = engine_test1.find_min_latency_batch(grid, cand_v,
+                                                 max_latency=max_latency)
+    valid = np.isfinite(minlat).all(axis=-1)
+    t_ras = circuit.timings_for_voltages(cand_v)[:, 2]
+    timings = np.concatenate(
+        [minlat, np.broadcast_to(t_ras, valid.shape)[..., None]], axis=-1)
+    timings = np.where(valid[..., None], timings, np.nan)
+    field_max = grid.susceptibility.reshape(grid.n_dimms, -1).max(axis=1)
+    threshold = errors.hammer_threshold(field_max[:, None],
+                                        cand_v[None, :])
+    if scale is not None:
+        s = np.array([float(scale.get(m, 1.0)) for m in grid.modules])
+        threshold = threshold * s[:, None]
+    with np.errstate(invalid="ignore"):
+        exposure = errors.hammer_exposure(timings[..., 2], timings[..., 1],
+                                          window_ms)
+        margin = threshold / exposure
+        valid = valid & (margin >= 1.0)
+    timings = np.where(valid[..., None], timings, np.nan)
+    return timings, valid, timings[:, :-1, 1] + timings[:, :-1, 2], margin
+
+
+class TestLegacyStackBitExact:
+    @settings(max_examples=5)
+    @given(seed=st.integers(0, 2**30),
+           max_latency=st.sampled_from([10.0, 15.0, 20.0]))
+    def test_property_pipeline_matches_straightline(self, seed, max_latency):
+        rng = np.random.default_rng(seed)
+        mods = tuple(rng.choice(ALL_MODULES, size=rng.integers(2, 5),
+                                replace=False))
+        grid = population.DimmGrid.from_population(mods)
+        got = fleet.build_tables(grid, CAND_V, max_latency=max_latency)
+        timings, valid, lat_feat, margin = _legacy_reference(
+            grid, CAND_V, max_latency, errors.HAMMER_WINDOW_MS)
+        np.testing.assert_array_equal(got.valid, valid, err_msg=str(mods))
+        for a, b in ((got.timings, timings), (got.lat_feat, lat_feat),
+                     (got.hammer_margin, margin)):
+            assert np.array_equal(a, b, equal_nan=True), mods
+
+    def test_explicit_legacy_policies_equal_default(self):
+        grid, legacy, _, _, _ = _env()
+        explicit = fleet.build_tables(grid, CAND_V, max_latency=AT_SPEED,
+                                      policies=fleet.legacy_policies())
+        assert np.array_equal(explicit.timings, legacy.timings,
+                              equal_nan=True)
+        np.testing.assert_array_equal(explicit.valid, legacy.valid)
+        assert explicit.policy_stack == legacy.policy_stack
+
+    def test_hammer_scale_threads_through_policy(self):
+        grid, _, _, _, _ = _env()
+        base = fleet.build_tables(grid, CAND_V)
+        di = base.modules.index("B5")
+        k_low = np.where(base.valid[di])[0][0]
+        # push B5's lowest-valid candidate just under margin 1 (fallback
+        # margins are far larger, so the build still succeeds)
+        scale = {"B5": float(0.9 / base.hammer_margin[di, k_low])}
+        got = fleet.build_tables(grid, CAND_V, hammer_scale=scale)
+        _, valid, _, margin = _legacy_reference(
+            grid, CAND_V, 20.0, errors.HAMMER_WINDOW_MS, scale)
+        assert not got.valid[di, k_low]
+        np.testing.assert_array_equal(got.valid, valid)
+        assert np.array_equal(got.hammer_margin, margin, equal_nan=True)
+        assert f"scale={{B5:{scale['B5']}}}" in got.policy_stack[1]
+
+    def test_stack_identity_recorded(self):
+        _, legacy, ecc, _, _ = _env()
+        assert legacy.stack_name == "min_latency+hammer"
+        assert ecc.stack_name == "min_latency+ecc+hammer"
+        assert len(legacy.policy_stack) == 2
+        assert len(ecc.policy_stack) == 3
+        assert f"max_latency={AT_SPEED}" in legacy.policy_stack[0]
+        # hand-built tables predating the pipeline read as "legacy"
+        bare = fleet.FleetTables(
+            legacy.modules, legacy.vendors, legacy.cand_v, legacy.timings,
+            legacy.valid, legacy.lat_feat, legacy.hammer_margin)
+        assert bare.stack_name == "legacy"
+
+    def test_pipeline_must_open_with_min_latency(self):
+        grid, _, _, _, _ = _env()
+        with pytest.raises(ValueError, match="MinLatencyFloor"):
+            fleet.build_tables(grid, CAND_V,
+                               policies=(fleet.HammerFloor(),))
+        with pytest.raises(ValueError, match="MinLatencyFloor"):
+            fleet.build_tables(grid, CAND_V, policies=())
+
+
+# --------------------------------------------------------------------------
+# ECC profiles and the shape-preserving secded_outcomes (satellite fixes)
+# --------------------------------------------------------------------------
+class TestEccProfiles:
+    def test_registered_profiles_partition(self):
+        secded = errors.ecc_profile("secded")
+        assert secded.corrects == ("one",)
+        assert secded.silent == ("many",)
+        on_die = errors.ecc_profile("on_die_sec")
+        assert on_die.detects == ()          # SEC: no double-detect bit
+        assert set(on_die.silent) == {"two", "many"}
+
+    def test_unknown_profile_rejected(self):
+        with pytest.raises(ValueError, match="on_die_sec"):
+            errors.ecc_profile("chipkill")
+
+    def test_partition_validated(self):
+        with pytest.raises(ValueError, match="partition"):
+            errors.EccProfile("bad", ("one",), ("one",), ("many",))
+
+    def test_rates_are_class_sums(self):
+        dist = {"zero": np.array([0.9, 0.4]), "one": np.array([0.05, 0.3]),
+                "two": np.array([0.03, 0.2]), "many": np.array([0.02, 0.1])}
+        corr, det, sil = errors.ecc_profile("secded").rates(dist)
+        np.testing.assert_allclose(corr, dist["one"])
+        np.testing.assert_allclose(det, dist["two"])
+        np.testing.assert_allclose(sil, dist["many"])
+        corr, det, sil = errors.ecc_profile("on_die_sec").rates(dist)
+        np.testing.assert_allclose(sil, dist["two"] + dist["many"])
+        np.testing.assert_allclose(det, 0.0)
+
+
+class TestSecdedOutcomeShapes:
+    def test_scalar_voltage_yields_floats(self):
+        grid, _, _, _, _ = _env()
+        o = errors.secded_outcomes(grid.dimms[0], 1.15)
+        assert isinstance(o.corrected, float)
+        assert isinstance(o.clean, float)
+
+    def test_vector_voltage_preserved(self):
+        """Regression: array inputs used to silently collapse to [0]."""
+        grid, _, _, _, _ = _env()
+        dimm = grid.dimms[0]
+        v = np.array([1.05, 1.15, 1.25])
+        o = errors.secded_outcomes(dimm, v)
+        for field in ("corrected", "detected", "undetected_or_mis", "clean"):
+            assert getattr(o, field).shape == v.shape, field
+        for i, vv in enumerate(v):
+            solo = errors.secded_outcomes(dimm, float(vv))
+            assert o.corrected[i] == solo.corrected
+            assert o.undetected_or_mis[i] == solo.undetected_or_mis
+        # the old collapse would have made every element equal element 0
+        assert not np.all(o.clean == o.clean[0])
+
+    def test_sufficiency_default_is_named_constant(self):
+        import inspect
+        sig = inspect.signature(errors.secded_is_sufficient)
+        assert (sig.parameters["threshold"].default
+                == errors.SECDED_SUFFICIENCY_THRESHOLD == 0.5)
+        assert fleet.EccAdmission().sufficiency \
+            == errors.SECDED_SUFFICIENCY_THRESHOLD
+
+
+# --------------------------------------------------------------------------
+# Batched beat-error distribution vs the scalar reference
+# --------------------------------------------------------------------------
+class TestBeatErrorBatch:
+    T_GRID = (20.0, 55.0, 70.0)
+
+    def test_batched_matches_scalar_per_lane(self):
+        grid, _, _, _, _ = _env()
+        a = population.beat_error_batch(grid, CAND_V, t_grid=self.T_GRID)
+        s = population.beat_error_batch(grid, CAND_V, t_grid=self.T_GRID,
+                                        impl="scalar")
+        for key in ("zero", "one", "two", "many"):
+            # scipy binomial pmf vs closed-form powers: float64 round-off
+            np.testing.assert_allclose(a[key], s[key], rtol=1e-9,
+                                       atol=1e-12, err_msg=key)
+
+    def test_dispatched_matches_direct_bit_exact(self):
+        grid, _, _, _, _ = _env()
+        a = population.beat_error_batch(grid, CAND_V, t_grid=self.T_GRID)
+        d = population.beat_error_batch(grid, CAND_V, t_grid=self.T_GRID,
+                                        dispatch="direct")
+        for key in a:
+            np.testing.assert_array_equal(a[key], d[key], err_msg=key)
+
+    def test_per_candidate_timings_accepted(self):
+        """The ECC policy passes [D, K] per-(DIMM, candidate) latencies."""
+        grid, legacy, _, _, _ = _env()
+        t_rcd = np.where(legacy.valid, legacy.timings[..., 0], 10.0)
+        t_rp = np.where(legacy.valid, legacy.timings[..., 1], 10.0)
+        a = population.beat_error_batch(grid, CAND_V, t_rcd, t_rp)
+        s = population.beat_error_batch(grid, CAND_V, t_rcd, t_rp,
+                                        impl="scalar")
+        assert a["zero"].shape == (grid.n_dimms, CAND_V.size, 1)
+        for key in a:
+            np.testing.assert_allclose(a[key], s[key], rtol=1e-9,
+                                       atol=1e-12, err_msg=key)
+
+    def test_distribution_normalized_and_monotone(self):
+        grid, _, _, _, _ = _env()
+        a = population.beat_error_batch(grid, CAND_V)
+        total = sum(a.values())
+        np.testing.assert_allclose(total, 1.0, atol=1e-12)
+        # higher voltage -> weakly cleaner beats at fixed timings
+        clean = a["zero"][..., 0]
+        assert (np.diff(clean, axis=1) >= -1e-12).all()
+
+
+# --------------------------------------------------------------------------
+# ECC-aware admission: strictly wider, never unsafe
+# --------------------------------------------------------------------------
+class TestEccAdmission:
+    def test_strictly_widens_at_speed(self):
+        _, legacy, ecc, _, _ = _env()
+        assert (legacy.valid <= ecc.valid).all()       # never narrows
+        extra = ecc.valid & ~legacy.valid
+        assert extra.any()                             # strictly widens
+        # per acceptance: on at least one vendor's DIMMs (A and C here)
+        vendors_widened = {ecc.vendors[d] for d, _ in np.argwhere(extra)}
+        assert "A" in vendors_widened
+        # B5's 1.10 V silent rate sits just above the default budget
+        bi = ecc.modules.index("B5")
+        assert not extra[bi].any()
+        assert (ecc.safe_vmin <= legacy.safe_vmin).all()
+        assert (ecc.safe_vmin < legacy.safe_vmin).any()
+
+    def test_admitted_candidates_respect_floors_and_budget(self):
+        grid, _, ecc, _, _ = _env()
+        legacy = _env()[1]
+        pol = fleet.EccAdmission()
+        for d, k in np.argwhere(ecc.valid & ~legacy.valid):
+            vd, v = ecc.vendors[d], ecc.cand_v[k]
+            assert v >= circuit.VENDORS[vd].recovery_floor
+            assert v >= grid.fail_floor[d]
+            assert ecc.silent[d, k] <= pol.max_silent
+            assert (ecc.silent[d, k] + ecc.detectable[d, k]
+                    <= pol.max_residual)
+            # ECC-admitted candidates run the probe (at-speed) timings
+            np.testing.assert_allclose(ecc.timings[d, k, :2],
+                                       pol.probe_latency)
+
+    def test_reliability_rows_carried_and_selected(self):
+        _, legacy, ecc, _, _ = _env()
+        assert legacy.silent is None and legacy.correctable is None
+        for a in (ecc.correctable, ecc.detectable, ecc.silent):
+            assert a.shape == ecc.valid.shape
+            # NaN-exclusion convention: rates exactly for admitted lanes
+            np.testing.assert_array_equal(np.isfinite(a), ecc.valid)
+            assert (a[ecc.valid] >= 0).all()
+        sub = ecc.select(("C6", "A2"))
+        ci = ecc.modules.index("C6")
+        np.testing.assert_array_equal(sub.silent[0], ecc.silent[ci])
+        assert sub.policy_stack == ecc.policy_stack
+
+    def test_higher_ceiling_never_needs_ecc_here(self):
+        """At the default ceiling every floor-passing candidate already has
+        an error-free latency, so ECC admits nothing extra: the stacks
+        agree (the widening is genuinely the at-speed scenario)."""
+        grid, _, _, _, _ = _env()
+        legacy20 = fleet.build_tables(grid, CAND_V)
+        ecc20 = fleet.build_tables(grid, CAND_V,
+                                   policies=fleet.ecc_policies())
+        np.testing.assert_array_equal(legacy20.valid, ecc20.valid)
+
+    def test_run_suite_parity_on_widened_tables(self):
+        """Per-lane parity survives ECC widening: every fleet lane on the
+        ECC tables reproduces a per-DIMM run_suite call bit-exactly."""
+        _, _, ecc, wls, model = _env()
+        sub = ecc.select(("A2", "C6"))
+        res = voltron.run_fleet(list(wls), tables=sub, n_intervals=3,
+                                model=model)
+        for di, m in enumerate(sub.modules):
+            suite = voltron.run_suite(list(wls), n_intervals=3, model=model,
+                                      tables=sub.select([m]))
+            for wi, r in enumerate(suite):
+                np.testing.assert_array_equal(
+                    res.selected_voltages[wi, di], r.selected_voltages,
+                    err_msg=f"{m}/{r.workload}")
+        assert res.policy_stack == ecc.policy_stack
+
+    def test_vendor_reliability_report(self):
+        _, legacy, ecc, wls, model = _env()
+        res = voltron.run_fleet(list(wls), tables=ecc, n_intervals=3,
+                                model=model)
+        rep = res.vendor_reliability()
+        assert set(rep) == set(ecc.vendors)
+        for rates in rep.values():
+            assert set(rates) == {"correctable", "detectable", "silent"}
+            for d in rates.values():
+                assert d["min"] <= d["p50"] <= d["max"]
+        res_legacy = voltron.run_fleet(list(wls), tables=legacy,
+                                       n_intervals=3, model=model)
+        with pytest.raises(ValueError, match="ECC policy"):
+            res_legacy.vendor_reliability()
+
+
+# --------------------------------------------------------------------------
+# Service: per-stack table registry, mid-stream coexistence
+# --------------------------------------------------------------------------
+def _serve_all(service, requests):
+    async def run():
+        out = await asyncio.gather(*(service.submit(r) for r in requests),
+                                   return_exceptions=True)
+        await service.drain()
+        return out
+    return asyncio.run(run())
+
+
+class TestServiceStacks:
+    def _service(self):
+        grid, legacy, ecc, wls, model = _env()
+        service = svc.EngineService(
+            grid, tables=legacy, workloads=wls, model=model,
+            config=svc.ServiceConfig(window_s=0.05))
+        name = service.install_tables(ecc, stack="ecc-on",
+                                      make_default=False)
+        assert name == "ecc-on"
+        return service, wls
+
+    def test_stacks_coexist_and_route(self):
+        service, wls = self._service()
+        assert service.table_stacks[0] == "min_latency+hammer"
+        assert "ecc-on" in service.table_stacks
+        names = (wls[0][0],)
+        reqs = [svc.FleetRequest(names, ("A2", "C6"), n_intervals=3),
+                svc.FleetRequest(names, ("A2", "C6"), n_intervals=3,
+                                 policy_stack="ecc-on")]
+        off, on = _serve_all(service, reqs)
+        # the ECC stack unlocks strictly lower floors on these DIMMs
+        assert (on.selected_voltages.min(axis=-1)
+                <= off.selected_voltages.min(axis=-1)).all()
+        assert (on.selected_voltages.min(axis=-1)
+                < off.selected_voltages.min(axis=-1)).any()
+        assert on.policy_stack != off.policy_stack
+        assert set(on.vendor_reliability()) == {"A", "C"}
+        with pytest.raises(ValueError, match="ECC policy"):
+            off.vendor_reliability()
+
+    def test_unknown_stack_fails_typed(self):
+        service, wls = self._service()
+        req = svc.FleetRequest((wls[0][0],), ("A2",), n_intervals=2,
+                               policy_stack="nope")
+        [err] = _serve_all(service, [req])
+        assert isinstance(err, svc.TableUnavailableError)
+
+    def test_drop_from_one_stack_leaves_other_serving(self):
+        service, wls = self._service()
+        service.drop_table("A2", stack="ecc-on")
+        names = (wls[0][0],)
+        off, on = _serve_all(service, [
+            svc.FleetRequest(names, ("A2",), n_intervals=2),
+            svc.FleetRequest(names, ("A2",), n_intervals=2,
+                             policy_stack="ecc-on")])
+        assert not isinstance(off, Exception)
+        assert isinstance(on, svc.TableUnavailableError)
